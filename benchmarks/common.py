@@ -1,0 +1,26 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_us(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out) if hasattr(out, "block_until_ready") or isinstance(
+        out, jax.Array) else None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    try:
+        jax.block_until_ready(out)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

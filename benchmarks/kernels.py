@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: fused gather_pool / cache_probe / flash_decode
+vs their pure-jnp oracles (CPU timings are indicative only; the structural
+win — fused dequant+pool, single pass over KV — is the TPU story)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_us
+from repro.kernels import ops, ref
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+
+    R, D, N, P = 4096, 128, 64, 32
+    payload = jnp.asarray(rng.integers(0, 255, (R, D)), jnp.uint8)
+    scale = jnp.asarray(rng.random(R), jnp.float32) * 0.1
+    bias = jnp.asarray(rng.standard_normal(R), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, R, (N, P)), jnp.int32)
+    t_ref = time_us(lambda: ref.gather_pool_ref(payload, scale, bias, idx), iters=20)
+    err = float(jnp.max(jnp.abs(
+        ops.embedding_gather_pool(payload, scale, bias, idx)
+        - ref.gather_pool_ref(payload, scale, bias, idx))))
+    emit("kernel_gather_pool", t_ref, f"ref_us={t_ref:.0f};allclose_err={err:.1e}")
+    out["gather_pool_err"] = err
+
+    S, W = 1024, 8
+    tt = jnp.asarray(rng.integers(0, 64, (S, W)), jnp.int32)
+    tr = jnp.asarray(rng.integers(0, 1 << 20, (S, W)), jnp.int32)
+    data = jnp.asarray(rng.standard_normal((S, W, D)), jnp.float32)
+    qt = jnp.asarray(rng.integers(0, 64, (N,)), jnp.int32)
+    qr = jnp.asarray(rng.integers(0, 1 << 20, (N,)), jnp.int32)
+    sets = jnp.asarray(rng.integers(0, S, (N,)), jnp.int32)
+    v1, h1 = ops.row_cache_probe(tt, tr, data, qt, qr, sets)
+    v2, h2 = ref.cache_probe_ref(tt, tr, data, qt, qr, sets)
+    err = float(jnp.max(jnp.abs(v1 - v2)))
+    t_ref = time_us(lambda: ref.cache_probe_ref(tt, tr, data, qt, qr, sets), iters=20)
+    emit("kernel_cache_probe", t_ref, f"ref_us={t_ref:.0f};allclose_err={err:.1e}")
+    out["cache_probe_err"] = err
+
+    B, H, K, hd, SS = 4, 16, 4, 64, 2048
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, SS, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, SS, K, hd)), jnp.float32)
+    kl = jnp.asarray(rng.integers(SS // 2, SS, (B,)), jnp.int32)
+    o1 = ops.decode_attention(q, k, v, kl, block_s=512)
+    o2 = ref.flash_decode_ref(q, k, v, kl)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    t_ref = time_us(lambda: ref.flash_decode_ref(q, k, v, kl), iters=20)
+    emit("kernel_flash_decode", t_ref, f"ref_us={t_ref:.0f};allclose_err={err:.1e}")
+    out["flash_decode_err"] = err
+    return out

@@ -1,0 +1,138 @@
+"""Roofline analysis (deliverable g): per (arch x shape), single-pod mesh.
+
+XLA's cost_analysis counts each ``while`` (scan) body once, so the full-depth
+compiled artifact under-reports FLOPs/bytes/collectives by ~num_layers. The
+harness therefore compiles two *fully-unrolled shallow* variants (L1- and
+L2-layer models with microbatches=1) per cell, extracts exact per-layer
+deltas, and extrapolates:
+
+    cost(L) = base + per_layer * L          (base = embed + loss + optimizer)
+
+The chunk/microbatch/attention scans are unrolled for these probes
+(``FULL_UNROLL``), so intra-layer loops are counted exactly too. Hardware
+constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (mesh.py).
+
+Outputs one JSON per cell under artifacts/roofline/ and a CSV summary.
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--arch A] [--shape S]
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import ASSIGNED_ARCHS, SHAPE_ORDER, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def _probe_depths(cfg):
+    """Two shallow depths honoring the arch's structural period."""
+    unit = 1
+    if cfg.family == "hybrid":
+        unit = cfg.shared_attn_every
+    elif cfg.family == "vlm":
+        unit = cfg.cross_attn_every
+    return unit, 2 * unit
+
+
+def measure_cell(arch: str, shape_name: str) -> dict:
+    from repro.launch.dryrun import run_cell
+
+    cfg = get_config(arch)
+    l1, l2 = _probe_depths(cfg)
+    override = {"microbatches": 1, "remat_span": 1}
+    cells = {}
+    for L in (l1, l2):
+        c = run_cell(arch, shape_name, False,
+                     cfg_override=dict(override, num_layers=L),
+                     full_unroll=True, tag=f"_L{L}")
+        if c["status"] != "ok":
+            return c
+        cells[L] = c
+
+    L_full = cfg.num_layers
+
+    def extrap(key_fn):
+        m1, m2 = key_fn(cells[l1]), key_fn(cells[l2])
+        per_layer = (m2 - m1) / (l2 - l1)
+        base = m1 - per_layer * l1
+        return base + per_layer * L_full, per_layer, base
+
+    flops, flops_pl, flops_base = extrap(lambda c: c["hlo_flops_per_device"])
+    byts, bytes_pl, bytes_base = extrap(lambda c: c["hlo_bytes_per_device"])
+    wire, wire_pl, wire_base = extrap(
+        lambda c: c["collectives"]["total_wire_bytes"])
+
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = byts / HBM_BW
+    t_collective = wire / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    bottleneck = max(terms, key=terms.get).replace("_s", "")
+    model_flops = cells[l1]["model_flops_global"] / _model_flops_depth_scale(
+        cfg, l1)
+
+    # roofline fraction: ideal time (compute term at peak) / achievable time
+    # (sum of the two dominant serial terms as a pessimistic, no-overlap bound)
+    t_bound = max(terms.values())
+    chips = cells[l1]["chips"]
+    useful = model_flops / (flops * chips) if flops else 0.0
+    out = {
+        "arch": arch, "shape": shape_name, "mesh": "single", "chips": chips,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": byts,
+        "collective_wire_bytes": wire,
+        "per_layer": {"flops": flops_pl, "bytes": bytes_pl, "wire": wire_pl},
+        "base": {"flops": flops_base, "bytes": bytes_base, "wire": wire_base},
+        "roofline": dict(terms, bottleneck=bottleneck,
+                         step_time_bound_s=t_bound,
+                         roofline_fraction=t_compute / t_bound if t_bound else 0.0),
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": useful,
+        "status": "ok",
+    }
+    return out
+
+
+def _model_flops_depth_scale(cfg, probe_depth) -> float:
+    """model_flops reported by the probe is for the shallow model; rescale to
+    full depth using the analytic param counts (embedding excluded from the
+    per-layer part)."""
+    import dataclasses
+    shallow = dataclasses.replace(cfg, num_layers=probe_depth).param_count()
+    full = cfg.param_count()
+    return shallow / full
+
+
+def run(archs=None, shapes=None, out_dir: str = "artifacts/roofline") -> list:
+    from benchmarks.common import emit
+
+    archs = archs or list(ASSIGNED_ARCHS)
+    shapes = shapes or list(SHAPE_ORDER)
+    Path(out_dir).mkdir(parents=True, exist_ok=True)
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            cell = measure_cell(arch, shape)
+            name = f"{arch}__{shape}"
+            Path(out_dir, f"{name}.json").write_text(json.dumps(cell, indent=1))
+            if cell["status"] == "ok":
+                r = cell["roofline"]
+                emit(f"roofline_{name}", r["step_time_bound_s"] * 1e6,
+                     f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f};"
+                     f"c={r['compute_s']:.2e};m={r['memory_s']:.2e};"
+                     f"x={r['collective_s']:.2e};useful={cell['useful_flops_ratio']:.2f}")
+            else:
+                emit(f"roofline_{name}", 0.0,
+                     f"{cell['status']}:{cell.get('reason', cell.get('error', ''))[:80]}")
+            rows.append(cell)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    args = ap.parse_args()
+    run([args.arch] if args.arch else None,
+        [args.shape] if args.shape else None)

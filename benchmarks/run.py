@@ -1,0 +1,56 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+Each module reproduces one paper table/figure; the roofline benchmark (slow:
+it compiles shallow-unrolled probes per cell) runs only with --roofline.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roofline", action="store_true",
+                    help="also run the (slow) per-cell roofline probes")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (depruning, fig1_skew, fig3_io, fig45_locality,
+                            fig6_cache_org, interop_warmup, kernels,
+                            table8_power, table9_scaleout,
+                            table11_multitenancy, table34_pooled)
+
+    suites = [
+        ("fig1_skew", fig1_skew.run),
+        ("fig3_io", fig3_io.run),
+        ("fig45_locality", fig45_locality.run),
+        ("fig6_cache_org", fig6_cache_org.run),
+        ("table34_pooled", table34_pooled.run),
+        ("table8_power", table8_power.run),
+        ("table9_scaleout", table9_scaleout.run),
+        ("table11_multitenancy", table11_multitenancy.run),
+        ("depruning", depruning.run),
+        ("interop_warmup", interop_warmup.run),
+        ("kernels", kernels.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        if args.only and args.only != name:
+            continue
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failed += 1
+            print(f"{name},0.00,ERROR", file=sys.stdout)
+            traceback.print_exc()
+    if args.roofline:
+        from benchmarks import roofline
+        roofline.run()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

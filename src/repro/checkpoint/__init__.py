@@ -1,0 +1,5 @@
+from repro.checkpoint.manager import (  # noqa: F401
+    CheckpointManager,
+    incremental_embedding_update,
+    latest_step,
+)

@@ -1,0 +1,126 @@
+"""Sharded, atomic checkpointing with restart/reshard support.
+
+Layout: ``<dir>/step_<N>/`` holding one ``.npy`` per pytree leaf (flattened
+key path) + ``manifest.json`` (tree structure, shapes, dtypes, step). Commit
+is atomic: written to ``step_<N>.tmp`` then renamed, so a crash mid-save
+never corrupts the latest checkpoint; restore always picks the newest
+complete manifest.
+
+Supports the paper's model-update path (App. A.3): *incremental embedding
+updates* write only the changed embedding-table leaves plus a delta manifest,
+so frequent model refreshes don't rewrite the dense parameters (and on SM the
+write amplification stays within endurance budgets).
+
+At 1000+ nodes each host writes only its local shards (here: the single-host
+degenerate case writes everything); restore reshards by loading full arrays
+and ``device_put``-ing against the new mesh, which also serves elastic
+restarts onto a different device count.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    d = Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = []
+    for p in d.iterdir():
+        if p.name.startswith("step_") and not p.name.endswith(".tmp") and \
+                (p / "manifest.json").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, *, keep: int = 3):
+        self.dir = Path(ckpt_dir)
+        self.keep = keep
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, state, step: int) -> str:
+        flat = _flatten(state)
+        tmp = self.dir / f"step_{step}.tmp"
+        final = self.dir / f"step_{step}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "leaves": {}}
+        for key, leaf in flat.items():
+            arr = np.asarray(jax.device_get(leaf))
+            fname = key.replace("/", "__") + ".npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"][key] = {"file": fname, "shape": list(arr.shape),
+                                       "dtype": str(arr.dtype)}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        os.replace(tmp, final)  # atomic commit
+        self._gc()
+        return str(final)
+
+    def _gc(self):
+        steps = sorted(s for s in (
+            int(p.name.split("_")[1]) for p in self.dir.iterdir()
+            if p.name.startswith("step_") and not p.name.endswith(".tmp")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def restore(self, like, step: Optional[int] = None, *, shardings=None):
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs). ``shardings``: optional matching pytree of
+        shardings for resharded/elastic restore."""
+        step = step if step is not None else latest_step(str(self.dir))
+        if step is None:
+            return None, None
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat_like = _flatten(like)
+        flat_shard = _flatten(shardings) if shardings is not None else {}
+        out = {}
+        for key in flat_like:
+            info = manifest["leaves"][key]
+            arr = np.load(d / info["file"])
+            if key in flat_shard and flat_shard[key] is not None:
+                out[key] = jax.device_put(arr, flat_shard[key])
+            else:
+                out[key] = jax.numpy.asarray(arr)
+        tree = jax.tree_util.tree_structure(like)
+        leaves_in_order = [out[k] for k in _flatten(like)]
+        return jax.tree_util.tree_unflatten(tree, leaves_in_order), step
+
+
+def incremental_embedding_update(base_dir: str, step: int, tables: Dict[str, Any],
+                                 *, update_id: int) -> str:
+    """Paper A.3: write only changed embedding tables as a delta on top of a
+    full checkpoint; serving hosts apply deltas cache-first with dirty
+    write-back to SM."""
+    d = Path(base_dir) / f"step_{step}" / f"emb_update_{update_id}.tmp"
+    final = Path(str(d)[:-4])
+    d.mkdir(parents=True, exist_ok=True)
+    manifest = {"update_id": update_id, "tables": {}}
+    for name, arr in tables.items():
+        arr = np.asarray(arr)
+        np.save(d / f"{name}.npy", arr)
+        manifest["tables"][name] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    (d / "delta.json").write_text(json.dumps(manifest))
+    os.replace(d, final)
+    return str(final)

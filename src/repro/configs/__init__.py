@@ -1,0 +1,43 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+Importing this package registers the 10 assigned architectures and the
+paper's DLRM models (Table 6).
+"""
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    SHAPE_ORDER,
+    DLRMConfig,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    get_dlrm_config,
+    list_archs,
+)
+
+# Register all assigned architectures.
+from repro.configs import (  # noqa: F401
+    deepseek_moe_16b,
+    dlrm_models,
+    granite_34b,
+    granite_3_2b,
+    hubert_xlarge,
+    llama_3_2_vision_90b,
+    mamba2_1_3b,
+    mixtral_8x22b,
+    qwen1_5_0_5b,
+    smollm_135m,
+    zamba2_1_2b,
+)
+
+ASSIGNED_ARCHS = (
+    "mixtral-8x22b",
+    "deepseek-moe-16b",
+    "mamba2-1.3b",
+    "hubert-xlarge",
+    "granite-3-2b",
+    "granite-34b",
+    "qwen1.5-0.5b",
+    "smollm-135m",
+    "zamba2-1.2b",
+    "llama-3.2-vision-90b",
+)

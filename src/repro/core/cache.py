@@ -1,0 +1,136 @@
+"""Software-managed set-associative row cache (the paper's FM cache, §4.3).
+
+Two implementations share one geometry:
+
+* :class:`JaxRowCache` — arrays-as-state, pure-functional lookup/insert usable
+  under ``jit`` and on-device (HBM). The hot lookup path is the
+  ``kernels.cache_probe`` Pallas kernel; this module provides the reference
+  semantics and the insert/eviction scatter.
+* ``cache_sim.SimRowCache`` — fast host simulator for the trace-driven paper
+  reproductions (Fig. 4/6, Tables 8–9 hit rates).
+
+Keys are (table_id, row_id) int32 pairs (two tag planes — no int64 needed on
+device). Geometry mirrors the paper's dual cache (Fig. 6): a
+*memory-optimized* parameterization (more ways, 8 B metadata/row) for rows
+<= 255 B and a *CPU-optimized* one (fewer ways, 40 B metadata/row) above.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = jnp.int32(-1)
+
+MEM_OPT_ROW_LIMIT = 255  # bytes; paper: dim <= 255B -> memory-optimized cache
+MEM_OPT_METADATA_B = 8
+CPU_OPT_METADATA_B = 40
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheGeometry:
+    num_sets: int
+    ways: int
+    dim: int  # cached row payload elements
+
+    @property
+    def capacity_rows(self) -> int:
+        return self.num_sets * self.ways
+
+
+def make_key(table_id, row_id):
+    """(table, row) int32 pair — stacked last-dim-2 array."""
+    t = jnp.asarray(table_id, jnp.int32)
+    r = jnp.asarray(row_id, jnp.int32)
+    return jnp.stack(jnp.broadcast_arrays(t, r), axis=-1)
+
+
+def set_index(tables: jax.Array, rows: jax.Array, num_sets: int) -> jax.Array:
+    """Fibonacci-style 32-bit mix of (table, row) -> set id."""
+    h = tables.astype(jnp.uint32) * jnp.uint32(0x85EBCA6B)
+    h = h ^ (rows.astype(jnp.uint32) * jnp.uint32(0x9E3779B9))
+    h = h ^ (h >> jnp.uint32(16))
+    return (h % jnp.uint32(num_sets)).astype(jnp.int32)
+
+
+class JaxRowCache:
+    """Functional set-associative cache; state is a pytree of arrays."""
+
+    def __init__(self, geometry: CacheGeometry, dtype=jnp.float32):
+        self.geo = geometry
+        self.dtype = dtype
+
+    def init(self) -> dict:
+        g = self.geo
+        return {
+            "tag_table": jnp.full((g.num_sets, g.ways), EMPTY, jnp.int32),
+            "tag_row": jnp.full((g.num_sets, g.ways), EMPTY, jnp.int32),
+            "data": jnp.zeros((g.num_sets, g.ways, g.dim), self.dtype),
+            "stamp": jnp.zeros((g.num_sets, g.ways), jnp.int32),
+            "clock": jnp.zeros((), jnp.int32),
+            "hits": jnp.zeros((), jnp.int32),
+            "misses": jnp.zeros((), jnp.int32),
+        }
+
+    def lookup(self, state: dict, tables: jax.Array, rows: jax.Array
+               ) -> Tuple[jax.Array, jax.Array, dict]:
+        """tables/rows: [N] int32 -> (values [N, D], hit [N] bool, state')."""
+        g = self.geo
+        sets = set_index(tables, rows, g.num_sets)             # [N]
+        match = ((state["tag_table"][sets] == tables[:, None]) &
+                 (state["tag_row"][sets] == rows[:, None]))    # [N, W]
+        hit = jnp.any(match, axis=1)
+        way = jnp.argmax(match, axis=1)                        # [N]
+        values = state["data"][sets, way]                      # [N, D]
+        values = jnp.where(hit[:, None], values, 0)
+        clock = state["clock"] + 1
+        stamp = state["stamp"].at[sets, way].set(
+            jnp.where(hit, clock, state["stamp"][sets, way]))
+        new_state = dict(state, stamp=stamp, clock=clock,
+                         hits=state["hits"] + jnp.sum(hit, dtype=jnp.int32),
+                         misses=state["misses"] + jnp.sum(~hit, dtype=jnp.int32))
+        return values, hit, new_state
+
+    def insert(self, state: dict, tables: jax.Array, rows: jax.Array,
+               values: jax.Array, mask=None) -> dict:
+        """Insert rows (LRU way eviction). mask=False entries are skipped.
+
+        Duplicate keys in one batch resolve to the last writer (scatter order).
+        """
+        g = self.geo
+        if mask is None:
+            mask = jnp.ones(tables.shape, bool)
+        sets = set_index(tables, rows, g.num_sets)
+        match = ((state["tag_table"][sets] == tables[:, None]) &
+                 (state["tag_row"][sets] == rows[:, None]))
+        already = jnp.any(match, axis=1)
+        lru_way = jnp.argmin(state["stamp"][sets], axis=1)
+        way = jnp.where(already, jnp.argmax(match, axis=1), lru_way)
+        sets_w = jnp.where(mask, sets, 0)
+        way_w = jnp.where(mask, way, 0)
+        clock = state["clock"] + 1
+
+        tt = state["tag_table"].at[sets_w, way_w].set(
+            jnp.where(mask, tables, state["tag_table"][sets_w, way_w]))
+        tr = state["tag_row"].at[sets_w, way_w].set(
+            jnp.where(mask, rows, state["tag_row"][sets_w, way_w]))
+        data = state["data"].at[sets_w, way_w].set(
+            jnp.where(mask[:, None], values.astype(self.dtype),
+                      state["data"][sets_w, way_w]))
+        stamp = state["stamp"].at[sets_w, way_w].set(
+            jnp.where(mask, clock, state["stamp"][sets_w, way_w]))
+        return dict(state, tag_table=tt, tag_row=tr, data=data,
+                    stamp=stamp, clock=clock)
+
+
+def dual_cache_geometry(fm_budget_bytes: int, dim: int, row_payload_bytes: int,
+                        ways: int = 8) -> CacheGeometry:
+    """Size a cache to an FM byte budget, with the paper's dual-cache metadata
+    overheads (Fig. 6): rows <=255 B use the memory-optimized parameterization."""
+    meta = MEM_OPT_METADATA_B if row_payload_bytes <= MEM_OPT_ROW_LIMIT else CPU_OPT_METADATA_B
+    per_row = row_payload_bytes + meta
+    rows = max(ways, fm_budget_bytes // per_row)
+    num_sets = max(1, rows // ways)
+    return CacheGeometry(num_sets=num_sets, ways=ways, dim=dim)

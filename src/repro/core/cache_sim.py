@@ -1,0 +1,139 @@
+"""Fast host-side cache simulator for trace-driven paper reproductions.
+
+Used by the benchmarks that replay 10^6..10^8 synthetic accesses (Fig. 4/6,
+steady-state hit rates behind Tables 8/9). Semantics match
+``cache.JaxRowCache`` (set-associative, LRU), plus a byte-budgeted unified
+mode with per-table row sizes (the paper's unified row cache) and an exact-LRU
+mode (OrderedDict) for organization studies.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Dict, Iterable, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cache import (CPU_OPT_METADATA_B, MEM_OPT_METADATA_B,
+                              MEM_OPT_ROW_LIMIT)
+
+
+class SimRowCache:
+    """Exact-LRU, byte-budgeted unified row cache."""
+
+    def __init__(self, capacity_bytes: int, metadata_bytes: Optional[int] = None):
+        self.capacity = capacity_bytes
+        self.metadata_bytes = metadata_bytes
+        self.used = 0
+        self.lru: "collections.OrderedDict[Tuple[int, int], int]" = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def _row_cost(self, row_bytes: int) -> int:
+        if self.metadata_bytes is not None:
+            return row_bytes + self.metadata_bytes
+        meta = MEM_OPT_METADATA_B if row_bytes <= MEM_OPT_ROW_LIMIT else CPU_OPT_METADATA_B
+        return row_bytes + meta
+
+    def access(self, table_id: int, row_id: int, row_bytes: int) -> bool:
+        """Touch one row; returns hit?"""
+        key = (table_id, row_id)
+        if key in self.lru:
+            self.lru.move_to_end(key)
+            self.hits += 1
+            return True
+        self.misses += 1
+        cost = self._row_cost(row_bytes)
+        while self.used + cost > self.capacity and self.lru:
+            _, old = self.lru.popitem(last=False)
+            self.used -= old
+        if cost <= self.capacity:
+            self.lru[key] = cost
+            self.used += cost
+        return False
+
+    def access_batch(self, table_id: int, rows: np.ndarray, row_bytes: int) -> int:
+        """Returns number of hits for a batch of row ids."""
+        h = 0
+        for r in rows:
+            h += self.access(table_id, int(r), row_bytes)
+        return h
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset_stats(self):
+        self.hits = 0
+        self.misses = 0
+
+
+class PerTableCaches:
+    """Per-table cache organization (the losing design in Fig. 6): the FM
+    budget is statically partitioned across tables."""
+
+    def __init__(self, capacity_bytes: int, table_ids: Iterable[int],
+                 weights: Optional[Dict[int, float]] = None):
+        ids = list(table_ids)
+        if weights is None:
+            weights = {t: 1.0 for t in ids}
+        wsum = sum(weights[t] for t in ids)
+        self.caches = {
+            t: SimRowCache(int(capacity_bytes * weights[t] / wsum)) for t in ids}
+
+    def access(self, table_id: int, row_id: int, row_bytes: int) -> bool:
+        return self.caches[table_id].access(table_id, row_id, row_bytes)
+
+    @property
+    def hit_rate(self) -> float:
+        hits = sum(c.hits for c in self.caches.values())
+        total = hits + sum(c.misses for c in self.caches.values())
+        return hits / total if total else 0.0
+
+
+class SetAssocSimCache:
+    """Vectorized set-associative LRU cache over numpy arrays — fast enough to
+    replay multi-million-access traces; mirrors JaxRowCache geometry."""
+
+    def __init__(self, num_sets: int, ways: int):
+        self.num_sets = num_sets
+        self.ways = ways
+        self.tags = np.full((num_sets, ways), -1, np.int64)
+        self.stamp = np.zeros((num_sets, ways), np.int64)
+        self.clock = 0
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _key(table_id: int, rows: np.ndarray) -> np.ndarray:
+        return (np.int64(table_id) << np.int64(40)) | rows.astype(np.int64)
+
+    def _sets(self, keys: np.ndarray) -> np.ndarray:
+        h = (keys.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)) >> np.uint64(33)
+        return (h % np.uint64(self.num_sets)).astype(np.int64)
+
+    def access_batch(self, table_id: int, rows: np.ndarray) -> np.ndarray:
+        """Sequential LRU semantics, vectorized per unique row."""
+        keys = self._key(table_id, rows)
+        sets = self._sets(keys)
+        hit = np.zeros(len(keys), bool)
+        for i in range(len(keys)):
+            s = sets[i]
+            line = self.tags[s]
+            self.clock += 1
+            w = np.nonzero(line == keys[i])[0]
+            if w.size:
+                hit[i] = True
+                self.stamp[s, w[0]] = self.clock
+            else:
+                victim = int(np.argmin(self.stamp[s]))
+                self.tags[s, victim] = keys[i]
+                self.stamp[s, victim] = self.clock
+        self.hits += int(hit.sum())
+        self.misses += int((~hit).sum())
+        return hit
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

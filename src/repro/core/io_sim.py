@@ -1,0 +1,145 @@
+"""SM device models & IO-path simulation (paper Table 1, Fig. 3, §4.1).
+
+Analytic models of the candidate SM technologies: IOPS ceilings, loaded
+latency curves, access granularity (-> read amplification), endurance
+(-> model-update interval), relative cost and power. The container has no
+NVMe; on a real host these constants are re-measured, not the code.
+
+The loaded-latency curve follows an M/M/c-like server: latency rises as
+rho -> 1, reproducing Fig. 3's shape (Optane stays flat to ~4 MIOPS; Nand
+collapses early and needs outstanding-IO throttling — the paper's burst
+smoothing, §4.1 Tuning API).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    name: str
+    iops_max: float            # random-read IOPS ceiling (per device)
+    base_latency_us: float     # unloaded access latency
+    access_granularity: int    # bytes per native read
+    endurance_dwpd: float      # physical drive writes per day (0 = n/a)
+    cost_rel_dram: float       # $/GB relative to DDR4
+    power_w: float             # active device power (W)
+    sourcing: str              # 'multi' | 'single'
+    write_bw_gbs: float = 1.0
+    capacity_gb: float = 2000.0
+    # latency curve shape: lat = base / (1 - rho)^alpha, clipped
+    alpha: float = 1.0
+    # burst sensitivity: queue depth above which latency degrades superlinearly
+    max_outstanding: int = 256
+
+    def loaded_latency_us(self, iops: float, outstanding: int = 32) -> float:
+        rho = min(iops / self.iops_max, 0.999)
+        lat = self.base_latency_us / (1.0 - rho) ** self.alpha
+        if outstanding > self.max_outstanding:
+            lat *= (outstanding / self.max_outstanding) ** 2  # burst collapse
+        return lat
+
+    def read_amplification(self, row_bytes: int, small_granularity: bool) -> float:
+        """Bytes moved / bytes wanted. §4.1.1's DWORD reads -> amplification 1."""
+        if small_granularity:
+            return 1.0  # §4.1.1: only the requested dwords cross the bus
+        return max(1.0, self.access_granularity / row_bytes)
+
+    def update_interval_days(self, model_size_gb: float, capacity_gb: float = None) -> float:
+        """Endurance -> min full-model update interval (§3):
+        interval = model_size / (DWPD * capacity) days."""
+        cap = capacity_gb or self.capacity_gb
+        if not self.endurance_dwpd:
+            return 0.0
+        return model_size_gb / (self.endurance_dwpd * cap)
+
+
+# Table 1 (public-information constants). Latency O(100)/O(10)/O(0.1) us.
+DEVICES: Dict[str, DeviceModel] = {
+    "nand_flash": DeviceModel(
+        name="PCIe Nand Flash", iops_max=0.5e6, base_latency_us=90.0,
+        access_granularity=4096, endurance_dwpd=5, cost_rel_dram=1 / 30,
+        power_w=10.0, sourcing="multi", capacity_gb=2000, alpha=1.6,
+        max_outstanding=64),
+    "optane_ssd": DeviceModel(
+        name="PCIe 3DXP (Optane)", iops_max=4.0e6, base_latency_us=9.0,
+        access_granularity=512, endurance_dwpd=100, cost_rel_dram=1 / 5,
+        power_w=14.0, sourcing="single", capacity_gb=400, alpha=0.7,
+        max_outstanding=1024),
+    "zssd": DeviceModel(
+        name="PCIe ZSSD", iops_max=1.0e6, base_latency_us=30.0,
+        access_granularity=4096, endurance_dwpd=5, cost_rel_dram=1 / 10,
+        power_w=10.0, sourcing="single", capacity_gb=800, alpha=1.3,
+        max_outstanding=128),
+    "optane_dimm": DeviceModel(
+        name="DIMM 3DXP (Optane)", iops_max=40e6, base_latency_us=0.3,
+        access_granularity=64, endurance_dwpd=0, cost_rel_dram=1 / 3,
+        power_w=15.0, sourcing="single", capacity_gb=512, alpha=0.5),
+    "cxl_3dxp": DeviceModel(
+        name="CXL 3DXP", iops_max=12e6, base_latency_us=0.6,
+        access_granularity=128, endurance_dwpd=0, cost_rel_dram=1 / 4,
+        power_w=15.0, sourcing="single", capacity_gb=1024, alpha=0.5),
+}
+
+
+@dataclasses.dataclass
+class IOQueueConfig:
+    """§4.1 Tuning API: outstanding IOs per table / tables in flight."""
+    max_outstanding_per_table: int = 32
+    max_tables_in_flight: int = 16
+    small_granularity: bool = True  # §4.1.1 DWORD reads enabled
+
+
+class IOEngine:
+    """Batched async IO simulation (io_uring analogue): submit a query's
+    misses, receive per-batch latency + bus bytes from the device model."""
+
+    def __init__(self, device: DeviceModel, num_devices: int = 1,
+                 queue: IOQueueConfig = IOQueueConfig()):
+        self.device = device
+        self.num_devices = num_devices
+        self.queue = queue
+        self.total_ios = 0
+        self.total_bus_bytes = 0
+        self.total_wanted_bytes = 0
+
+    def submit(self, num_ios: int, row_bytes: int, bg_iops: float):
+        """Simulate one batched submission of ``num_ios`` row reads while the
+        device sustains ``bg_iops`` background load.
+
+        Returns (latency_us, bus_bytes). IOs fan out across devices; latency is
+        the slowest device's loaded latency for its share of the batch.
+        """
+        if num_ios == 0:
+            return 0.0, 0
+        per_dev = math.ceil(num_ios / self.num_devices)
+        outstanding = min(per_dev, self.queue.max_outstanding_per_table)
+        waves = math.ceil(per_dev / max(1, outstanding))
+        lat = waves * self.device.loaded_latency_us(
+            bg_iops / self.num_devices, outstanding)
+        amp = self.device.read_amplification(row_bytes, self.queue.small_granularity)
+        bus = int(num_ios * row_bytes * amp)
+        self.total_ios += num_ios
+        self.total_bus_bytes += bus
+        self.total_wanted_bytes += num_ios * row_bytes
+        return lat, bus
+
+    @property
+    def bus_overhead(self) -> float:
+        if not self.total_wanted_bytes:
+            return 0.0
+        return self.total_bus_bytes / self.total_wanted_bytes - 1.0
+
+
+def required_iops(qps: float, tables: int, avg_pooling: float, miss_rate: float = 1.0) -> float:
+    """Eq. 8: IOPS ∝ QPS * Σ p_i (over SM tables), scaled by cache miss rate."""
+    return qps * tables * avg_pooling * miss_rate
+
+
+def bw_per_query_bytes(batch: int, tables: int, avg_pooling: float, row_bytes: float) -> float:
+    """Eq. 2 inner term for one side (user or item)."""
+    return batch * tables * avg_pooling * row_bytes

@@ -1,0 +1,80 @@
+"""Pooled-embedding cache (paper §4.4, Algorithm 1).
+
+Caches the *output* of lookup->dequant->pool for a whole embedding-bag
+request, keyed by an order-invariant hash of the index multiset (c = P
+scheme: only full-sequence hits). A hit skips IO, dequantization and pooling
+entirely. ``LenThreshold`` gates which requests participate (Table 4).
+"""
+from __future__ import annotations
+
+import collections
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def order_invariant_hash(table_id: int, indices: np.ndarray) -> int:
+    """Commutative 64-bit hash over the index multiset.
+
+    Per-element SplitMix64 finalizer, combined with + (order-invariant, and
+    multiset-sensitive unlike XOR, which would cancel duplicated indices).
+    """
+    x = indices.astype(np.uint64)
+    x = x + np.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    h = np.uint64(np.sum(x, dtype=np.uint64))
+    with np.errstate(over="ignore"):
+        tmix = np.uint64(table_id) * np.uint64(0xD6E8FEB86659FD93)  # wraps (intended)
+    return int(h ^ tmix)
+
+
+class PooledEmbeddingCache:
+    """LRU, byte-budgeted cache of pooled embedding vectors."""
+
+    def __init__(self, capacity_bytes: int, len_threshold: int = 1):
+        self.capacity = capacity_bytes
+        self.len_threshold = len_threshold
+        self.used = 0
+        self.store: "collections.OrderedDict[int, Tuple[np.ndarray, int]]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.skipped = 0           # requests below LenThreshold
+        self.hit_len_sum = 0       # total indices saved by hits (Table 4)
+
+    def lookup(self, table_id: int, indices: np.ndarray) -> Optional[np.ndarray]:
+        if len(indices) <= self.len_threshold:
+            self.skipped += 1
+            return None
+        key = order_invariant_hash(table_id, indices)
+        entry = self.store.get(key)
+        if entry is not None:
+            self.store.move_to_end(key)
+            self.hits += 1
+            self.hit_len_sum += len(indices)
+            return entry[0]
+        self.misses += 1
+        return None
+
+    def insert(self, table_id: int, indices: np.ndarray, pooled: np.ndarray) -> None:
+        if len(indices) <= self.len_threshold:
+            return
+        key = order_invariant_hash(table_id, indices)
+        cost = pooled.nbytes + 24  # key + sizes metadata
+        while self.used + cost > self.capacity and self.store:
+            _, (_, old) = self.store.popitem(last=False)
+            self.used -= old
+        if cost <= self.capacity:
+            self.store[key] = (pooled, cost)
+            self.used += cost
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    @property
+    def avg_hit_len(self) -> float:
+        return self.hit_len_sum / self.hits if self.hits else 0.0

@@ -1,0 +1,59 @@
+"""Row-wise embedding quantization (paper footnote 4, App. A.5).
+
+Rows are stored as ``[scale f32 | bias f32 | payload int8/int4]`` — the same
+packed layout the paper's DWORD-granularity NVMe reads fetch (§4.1.1). Row
+bytes therefore = 8 + D (int8) or 8 + ceil(D/2) (int4), which is what the IO
+model uses to compute read amplification against device access granularity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HEADER_BYTES = 8  # fp32 scale + fp32 bias per row
+
+
+def row_bytes(dim: int, bits: int = 8) -> int:
+    payload = dim if bits == 8 else (dim + 1) // 2
+    return HEADER_BYTES + payload
+
+
+def quantize_rows(table: jax.Array, bits: int = 8):
+    """table: [R, D] float. Returns dict(payload, scale, bias).
+
+    Asymmetric row-wise: q = round((x - min) / scale), scale = (max-min)/levels.
+    """
+    levels = (1 << bits) - 1
+    x = table.astype(jnp.float32)
+    lo = jnp.min(x, axis=1, keepdims=True)
+    hi = jnp.max(x, axis=1, keepdims=True)
+    scale = jnp.where(hi > lo, (hi - lo) / levels, 1.0)
+    q = jnp.clip(jnp.round((x - lo) / scale), 0, levels)
+    if bits == 8:
+        payload = q.astype(jnp.uint8)
+    elif bits == 4:
+        q = q.astype(jnp.uint8)
+        if q.shape[1] % 2:
+            q = jnp.pad(q, ((0, 0), (0, 1)))
+        payload = (q[:, 0::2] | (q[:, 1::2] << 4)).astype(jnp.uint8)
+    else:
+        raise ValueError(f"bits={bits}")
+    return {"payload": payload, "scale": scale[:, 0], "bias": lo[:, 0],
+            "bits": bits, "dim": table.shape[1]}
+
+
+def dequantize_rows(qt: dict, idx=None) -> jax.Array:
+    """Dequantize all rows (idx=None) or a gather of rows."""
+    payload, scale, bias = qt["payload"], qt["scale"], qt["bias"]
+    if idx is not None:
+        payload = jnp.take(payload, idx, axis=0)
+        scale = jnp.take(scale, idx, axis=0)
+        bias = jnp.take(bias, idx, axis=0)
+    if qt["bits"] == 4:
+        lo = payload & 0xF
+        hi = payload >> 4
+        q = jnp.stack([lo, hi], axis=-1).reshape(payload.shape[0], -1)
+        q = q[:, : qt["dim"]]
+    else:
+        q = payload
+    return q.astype(jnp.float32) * scale[:, None] + bias[:, None]

@@ -1,0 +1,156 @@
+"""SDM embedding store — the serving data plane (paper §4, Algorithm 1).
+
+Ties together placement (§4.6), the unified FM row cache (§4.3), the pooled
+embedding cache (§4.4), de-pruning (§4.5), quantized row storage and the
+IO engine (§4.1). One query flows:
+
+    per table: pooled-cache probe -> row-cache lookups -> batched SM IO for
+    misses -> dequant+pool (Pallas gather_pool on device; numpy fallback on
+    host) -> pooled-cache fill -> output dense vectors for the interaction.
+
+Latency accounting mirrors Eq. 3/4: user-side SM time is overlapped with
+item-side FM compute and only the excess surfaces in query latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import placement as plc
+from repro.core.cache_sim import SimRowCache
+from repro.core.io_sim import DeviceModel, IOEngine, IOQueueConfig
+from repro.core.locality import TableMeta, zipf_indices
+from repro.core.pooled_cache import PooledEmbeddingCache
+
+
+@dataclasses.dataclass
+class SDMConfig:
+    fm_cache_bytes: int = 4 << 30
+    pooled_cache_bytes: int = 0          # 0 = disabled
+    pooled_len_threshold: int = 4
+    placement: plc.PlacementConfig = dataclasses.field(
+        default_factory=plc.PlacementConfig)
+    io_queue: IOQueueConfig = dataclasses.field(default_factory=IOQueueConfig)
+    num_devices: int = 2
+    item_time_us: float = 200.0          # item-side (FM/accelerator) per-query time
+
+
+@dataclasses.dataclass
+class QueryStats:
+    latency_us: float = 0.0
+    sm_ios: int = 0
+    row_hits: int = 0
+    row_lookups: int = 0
+    pooled_hits: int = 0
+    pooled_lookups: int = 0
+
+
+class SDMEmbeddingStore:
+    """Host-side serving store over synthetic quantized tables."""
+
+    def __init__(self, metas: Sequence[TableMeta], device: DeviceModel,
+                 cfg: SDMConfig, *, seed: int = 0, materialize_dim: int = 0):
+        self.metas = {m.table_id: m for m in metas}
+        self.cfg = cfg
+        self.placement = plc.assign(list(metas), cfg.placement)
+        self.row_cache = SimRowCache(cfg.fm_cache_bytes)
+        self.pooled_cache = (PooledEmbeddingCache(cfg.pooled_cache_bytes,
+                                                  cfg.pooled_len_threshold)
+                             if cfg.pooled_cache_bytes else None)
+        self.io = IOEngine(device, cfg.num_devices, cfg.io_queue)
+        self.rng = np.random.default_rng(seed)
+        self.stats = QueryStats()
+        # Tiny materialized payloads for numeric paths (tests/examples);
+        # production tables stay virtual (metadata-only) for the big models.
+        self.payloads: Dict[int, np.ndarray] = {}
+        if materialize_dim:
+            for m in metas:
+                self.payloads[m.table_id] = self.rng.standard_normal(
+                    (min(m.num_rows, 4096), materialize_dim)).astype(np.float32)
+
+    # -- query path ----------------------------------------------------------
+
+    def lookup_pool(self, table_id: int, indices: np.ndarray,
+                    bg_iops: float = 0.0) -> dict:
+        """One embedding-bag request (Algorithm 1). Returns accounting dict;
+        the pooled vector too when payloads are materialized."""
+        m = self.metas[table_id]
+        place = self.placement[table_id]
+        st = self.stats
+
+        pooled_vec = None
+        if self.pooled_cache is not None and place != plc.FM_DIRECT:
+            st.pooled_lookups += 1
+            hit = self.pooled_cache.lookup(table_id, indices)
+            if hit is not None:
+                st.pooled_hits += 1
+                return {"latency_us": 0.0, "ios": 0, "pooled_hit": True,
+                        "vector": hit}
+
+        ios = 0
+        lat = 0.0
+        if place == plc.FM_DIRECT:
+            pass  # FM gather; counted on the item/FM side
+        else:
+            misses = np.zeros(len(indices), bool)
+            if place == plc.SM_CACHED:
+                for j, r in enumerate(indices):
+                    st.row_lookups += 1
+                    if self.row_cache.access(table_id, int(r), m.dim_bytes):
+                        st.row_hits += 1
+                    else:
+                        misses[j] = True
+            else:  # SM_UNCACHED: every lookup is an IO
+                misses[:] = True
+            ios = int(misses.sum())
+            lat, _ = self.io.submit(ios, m.dim_bytes, bg_iops)
+            st.sm_ios += ios
+
+        vec = None
+        if table_id in self.payloads:
+            tbl = self.payloads[table_id]
+            vec = tbl[np.asarray(indices) % tbl.shape[0]].sum(axis=0)
+            if self.pooled_cache is not None and place != plc.FM_DIRECT:
+                self.pooled_cache.insert(table_id, indices, vec)
+        elif self.pooled_cache is not None and place != plc.FM_DIRECT:
+            self.pooled_cache.insert(table_id, indices,
+                                     np.zeros(1, np.float32))  # metadata-only
+
+        return {"latency_us": lat, "ios": ios, "pooled_hit": False, "vector": vec}
+
+    def serve_query(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0) -> QueryStats:
+        """requests: {table_id: indices}. User-side tables execute against SM
+        in parallel with the item-side FM compute (Eq. 3): query latency is
+        max(item_time, slowest SM batch)."""
+        sm_lat = 0.0
+        ios = 0
+        for tid, idx in requests.items():
+            r = self.lookup_pool(tid, idx, bg_iops)
+            sm_lat = max(sm_lat, r["latency_us"])
+            ios += r["ios"]
+        q = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat), sm_ios=ios)
+        self.stats.latency_us += q.latency_us
+        return q
+
+    # -- trace helpers --------------------------------------------------------
+
+    def synth_query(self, *, user_only: bool = True) -> Dict[int, np.ndarray]:
+        out = {}
+        for m in self.metas.values():
+            if user_only and m.kind != "user":
+                continue
+            out[m.table_id] = zipf_indices(self.rng, m.num_rows, m.zipf_alpha,
+                                           m.pooling_factor)
+        return out
+
+    @property
+    def row_hit_rate(self) -> float:
+        s = self.stats
+        return s.row_hits / s.row_lookups if s.row_lookups else 0.0
+
+    @property
+    def pooled_hit_rate(self) -> float:
+        s = self.stats
+        return s.pooled_hits / s.pooled_lookups if s.pooled_lookups else 0.0

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    dlrm_batch_stream,
+    lm_batch_stream,
+    make_dlrm_batch,
+    make_lm_batch,
+)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the SDM hot paths, with jnp oracles in ref.py.
+
+gather_pool   — fused embedding gather + rowwise dequant + pooling (§4.4)
+cache_probe   — set-associative FM row-cache lookup (§4.3)
+flash_decode  — GQA decode attention over long KV (serving decode shapes)
+"""
+from repro.kernels.ops import (  # noqa: F401
+    decode_attention,
+    embedding_gather_pool,
+    row_cache_probe,
+)

@@ -1,0 +1,64 @@
+"""Set-associative cache probe Pallas kernel (the FM row-cache hot path, §4.3).
+
+One grid step probes one query against its cache set: the set's tag lines
+(table/row planes) live in VMEM, the way match is a vectorized compare, and
+the data selection is a [1, W] x [W, D] matmul with the one-hot match vector
+(MXU-friendly select — no gather). Set ids are precomputed on host/XLA side
+and ride in via scalar prefetch to drive the BlockSpec index_map.
+
+Grid: (N,). Outputs: values [N, D] (zeros on miss), hit [N] int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(sets_ref, qt_ref, qr_ref, tt_ref, tr_ref, data_ref,
+            out_ref, hit_ref):
+    n = pl.program_id(0)
+    qt = qt_ref[0]
+    qr = qr_ref[0]
+    match = (tt_ref[0, :] == qt) & (tr_ref[0, :] == qr)      # [W]
+    onehot = match.astype(jnp.float32)
+    line = data_ref[0].astype(jnp.float32)                   # [W, D]
+    out_ref[...] = jnp.dot(onehot[None, :], line,
+                           preferred_element_type=jnp.float32)
+    hit_ref[0] = jnp.any(match).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cache_probe(tag_table: jax.Array, tag_row: jax.Array, data: jax.Array,
+                q_table: jax.Array, q_row: jax.Array, sets: jax.Array,
+                *, interpret: bool = True):
+    """tag_table/tag_row: [Sets, W] int32; data: [Sets, W, D];
+    q_table/q_row: [N] int32; sets: [N] int32 (precomputed set ids).
+    Returns (values [N, D] f32, hit [N] int32)."""
+    N = q_table.shape[0]
+    S, W, D = data.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda n, sets: (n,)),        # q_table
+            pl.BlockSpec((1,), lambda n, sets: (n,)),        # q_row
+            pl.BlockSpec((1, W), lambda n, sets: (sets[n], 0)),
+            pl.BlockSpec((1, W), lambda n, sets: (sets[n], 0)),
+            pl.BlockSpec((1, W, D), lambda n, sets: (sets[n], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda n, sets: (n, 0)),
+            pl.BlockSpec((1,), lambda n, sets: (n,)),
+        ],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((N, D), jnp.float32),
+                   jax.ShapeDtypeStruct((N,), jnp.int32)],
+        interpret=interpret,
+    )(sets, q_table, q_row, tag_table, tag_row, data)

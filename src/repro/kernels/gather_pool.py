@@ -1,0 +1,62 @@
+"""Fused gather + row-wise dequant + pool Pallas kernel (SparseLengthsSum).
+
+The paper's embedding hot path (§4.4: lookup -> dequantize -> pool, FBGEMM's
+kernel on CPU) adapted to TPU: indices ride in SMEM via scalar prefetch
+(PrefetchScalarGridSpec) and drive the BlockSpec index_map, so each grid step
+DMAs exactly one quantized row (HBM -> VMEM) — the TPU analogue of the
+paper's DWORD-granularity NVMe reads: no block-sized read amplification.
+Dequant (scale/bias) and the pooling accumulation happen in VMEM on the VPU;
+the output bag block stays resident across the pooling dimension of the grid
+(revisited output block => accumulate in place).
+
+Grid: (num_bags, pooling). Payload rows should be padded to a multiple of 128
+lanes by the caller (ops.py handles padding/unpadding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, payload_ref, scale_ref, bias_ref, out_ref):
+    p = pl.program_id(1)
+    row = payload_ref[...].astype(jnp.float32)           # [1, D]
+    val = row * scale_ref[0] + bias_ref[0]
+
+    @pl.when(p == 0)
+    def _init():
+        out_ref[...] = val
+
+    @pl.when(p > 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + val
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_pool(payload: jax.Array, scale: jax.Array, bias: jax.Array,
+                indices: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """payload: [R, D] int8/uint8 quantized rows; scale/bias: [R] f32;
+    indices: [N, P] int32. Returns pooled bags [N, D] f32.
+    """
+    N, P = indices.shape
+    R, D = payload.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N, P),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda n, p, idx: (idx[n, p], 0)),
+            pl.BlockSpec((1,), lambda n, p, idx: (idx[n, p],)),
+            pl.BlockSpec((1,), lambda n, p, idx: (idx[n, p],)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda n, p, idx: (n, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
+        interpret=interpret,
+    )(indices, payload, scale, bias)

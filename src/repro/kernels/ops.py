@@ -1,0 +1,65 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handle TPU lane alignment (pad row dims to multiples of 128), dispatch
+interpret mode on CPU (the container target) vs compiled mode on TPU, and
+expose numerically-identical jnp fallbacks (ref.py) for XLA-only paths like
+the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cache_probe import cache_probe as _cache_probe_kernel
+from repro.kernels.flash_decode import flash_decode as _flash_decode_kernel
+from repro.kernels.gather_pool import gather_pool as _gather_pool_kernel
+
+LANE = 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_lanes(x: jax.Array, axis: int = -1):
+    d = x.shape[axis]
+    pad = (-d) % LANE
+    if pad == 0:
+        return x, d
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), d
+
+
+def embedding_gather_pool(payload: jax.Array, scale: jax.Array, bias: jax.Array,
+                          indices: jax.Array, *, use_kernel: bool = True) -> jax.Array:
+    """Fused lookup+dequant+pool. payload [R, D] int8/uint8; indices [N, P]."""
+    if not use_kernel:
+        return ref.gather_pool_ref(payload, scale, bias, indices)
+    padded, D = _pad_lanes(payload)
+    out = _gather_pool_kernel(padded, scale, bias, indices,
+                              interpret=not _on_tpu())
+    return out[:, :D]
+
+
+def row_cache_probe(tag_table, tag_row, data, q_table, q_row, sets, *,
+                    use_kernel: bool = True):
+    """Set-associative cache probe: (values [N, D], hit [N])."""
+    if not use_kernel:
+        return ref.cache_probe_ref(tag_table, tag_row, data, q_table, q_row, sets)
+    padded, D = _pad_lanes(data)
+    vals, hit = _cache_probe_kernel(tag_table, tag_row, padded, q_table, q_row,
+                                    sets, interpret=not _on_tpu())
+    return vals[:, :D], hit
+
+
+def decode_attention(q, k, v, kv_len, *, block_s: int = 512,
+                     use_kernel: bool = True):
+    """Flash decode attention: q [B,H,hd] vs cache k/v [B,S,K,hd]."""
+    if not use_kernel or k.shape[1] % block_s != 0:
+        return ref.flash_decode_ref(q, k, v, kv_len)
+    return _flash_decode_kernel(q, k, v, kv_len, block_s=block_s,
+                                interpret=not _on_tpu())

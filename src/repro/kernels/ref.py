@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pool_ref(payload: jax.Array, scale: jax.Array, bias: jax.Array,
+                    indices: jax.Array) -> jax.Array:
+    """payload [R, D] int; scale/bias [R]; indices [N, P] -> [N, D] f32."""
+    rows = payload[indices].astype(jnp.float32)              # [N, P, D]
+    rows = rows * scale[indices][..., None] + bias[indices][..., None]
+    return rows.sum(axis=1)
+
+
+def cache_probe_ref(tag_table, tag_row, data, q_table, q_row, sets):
+    """Reference set-associative probe. Returns (values [N,D] f32, hit [N] i32)."""
+    tags_t = tag_table[sets]                                 # [N, W]
+    tags_r = tag_row[sets]
+    match = (tags_t == q_table[:, None]) & (tags_r == q_row[:, None])
+    hit = match.any(axis=1)
+    onehot = match.astype(jnp.float32)                       # exclusive by invariant
+    values = jnp.einsum("nw,nwd->nd", onehot, data[sets].astype(jnp.float32))
+    return values, hit.astype(jnp.int32)
+
+
+def flash_decode_ref(q, k, v, kv_len):
+    """q [B,H,hd]; k/v [B,S,K,hd]; kv_len [B]. Returns [B,H,hd] f32."""
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    kr = jnp.repeat(k, G, axis=2).astype(jnp.float32)        # [B,S,H,hd]
+    vr = jnp.repeat(v, G, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kr) / jnp.sqrt(hd)
+    mask = jnp.arange(S)[None, :] < kv_len[:, None]          # [B, S]
+    scores = jnp.where(mask[:, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, vr)

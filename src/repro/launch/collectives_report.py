@@ -1,0 +1,76 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Collective profiler for one cell: groups wire bytes by op_name site.
+
+PYTHONPATH=src python -m repro.launch.collectives_report --arch X --shape Y
+    [--layers 2] [--no-fsdp] [--no-ep] [--cf 1.25]
+"""
+import argparse   # noqa: E402
+import re         # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "u8": 1, "s8": 1}
+
+
+def report(arch, shape, layers, **kw):
+    cfg_override = {"num_layers": layers, "microbatches": 1, "remat_span": 1}
+    cfg_override.update(kw.pop("cfg_override", {}))
+    cell = run_cell(arch, shape, False, cfg_override=cfg_override,
+                    full_unroll=True, save_hlo=True, out_dir="/tmp/collrep",
+                    tag="_rep", **kw)
+    if cell["status"] != "ok":
+        print(cell["status"], cell.get("error", ""))
+        return cell
+    text = open(cell["hlo_path"]).read()
+    sites = defaultdict(lambda: [0, 0])
+
+    def bts(dt, dims):
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            n *= int(d)
+        return n * DT.get(dt, 4)
+
+    for line in text.splitlines():
+        m = re.search(
+            r"= (?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)",
+            line)
+        if not m:
+            continue
+        tup, dt, dims, op = m.groups()
+        b = (sum(bts(d, s) for d, s in re.findall(r"(\w+)\[([\d,]*)\]", tup))
+             if tup is not None else bts(dt, dims))
+        meta = re.search(r'op_name="([^"]+)"', line)
+        key = op + " | " + (_site(meta.group(1)) if meta else "?")
+        sites[key][0] += 1
+        sites[key][1] += b
+    total = cell["collectives"]["total_wire_bytes"]
+    print(f"{arch} {shape} L={layers}: wire={total/1e9:.2f} GB/device "
+          f"(flops={cell['hlo_flops_per_device']:.2e})")
+    for k, (n, b) in sorted(sites.items(), key=lambda kv: -kv[1][1])[:14]:
+        print(f"  {b/2**20:9.1f} MiB x{n:3d}  {k}")
+    return cell
+
+
+def _site(op_name: str) -> str:
+    parts = op_name.split("/")
+    keep = [p for p in parts if ("->" in p or p.startswith("transpose")
+                                 or "jvp" in p or "dot" in p or "dynamic" in p
+                                 or "reduce" in p or "add" in p)][-3:]
+    return "/".join(keep) if keep else op_name[-60:]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--no-ep", dest="ep", action="store_false")
+    args = ap.parse_args()
+    report(args.arch, args.shape, args.layers, fsdp=args.fsdp,
+           expert_parallel=args.ep)

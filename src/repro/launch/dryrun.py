@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: the 16x16
+single-pod mesh and the 2x16x16 multi-pod mesh must compile for every
+assigned architecture x input shape, with memory_analysis() (fits in HBM)
+and cost_analysis() (roofline terms) captured per cell into
+``artifacts/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--fsdp/--no-fsdp] [--out DIR]
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, SHAPE_ORDER, get_config  # noqa: E402
+from repro.launch import hlo as hlo_mod  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import (DCN_BW, HBM_BW, HBM_PER_CHIP, ICI_BW,  # noqa: E402
+                               PEAK_FLOPS_BF16, make_production_mesh)
+from repro.models.layers import set_logical_rules  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *, fsdp: bool = True,
+             expert_parallel: bool = True, save_hlo: bool = False,
+             out_dir: str = "artifacts/dryrun", tag: str = "",
+             cfg_override: dict = None, shape_override: dict = None,
+             full_unroll: bool = False, serve_int8: bool = False,
+             seq_parallel=None, skip_memory_gate: bool = False) -> dict:
+    import dataclasses
+
+    from repro.models import layers as layers_mod
+
+    cfg = get_config(arch)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    shape = SHAPES[shape_name]
+    if shape_override:
+        shape = dataclasses.replace(shape, **shape_override)
+    layers_mod.FULL_UNROLL = full_unroll
+    mesh_name = "multi" if multi_pod else "single"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "fsdp": fsdp, "expert_parallel": expert_parallel, "tag": tag}
+
+    reason = cfg.skipped(shape_name)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        reason = reason or "full attention (quadratic); 500k decode context infeasible"
+    if shape.kind == "decode" and cfg.is_encoder_only:
+        reason = reason or "encoder-only: no decode step"
+    if reason:
+        cell["status"] = "skipped"
+        cell["reason"] = reason
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    try:
+        step, args, in_sp, out_sp, plan = steps_mod.build_step(
+            cfg, shape, mesh, fsdp=fsdp, expert_parallel=expert_parallel,
+            serve_int8=serve_int8, seq_parallel=seq_parallel)
+        set_logical_rules(plan.rules())
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(step, in_shardings=in_sp, out_shardings=out_sp)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            text = compiled.as_text()
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to report
+        cell["status"] = "FAILED"
+        cell["error"] = f"{type(e).__name__}: {e}"
+        cell["traceback"] = traceback.format_exc()[-2000:]
+        set_logical_rules(None)
+        layers_mod.FULL_UNROLL = False
+        return cell
+    finally:
+        set_logical_rules(None)
+        layers_mod.FULL_UNROLL = False
+
+    coll = hlo_mod.collective_stats(text, default_group=mesh.shape["model"])
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+
+    # Roofline terms (seconds). HLO here is the per-device program, so
+    # flops/bytes from cost_analysis are per-device already.
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_accessed / HBM_BW
+    t_collective = coll["total_wire_bytes"] / ICI_BW
+
+    arg_b = mem.argument_size_in_bytes if mem else 0
+    out_b = mem.output_size_in_bytes if mem else 0
+    tmp_b = mem.temp_size_in_bytes if mem else 0
+    alias_b = mem.alias_size_in_bytes if mem else 0
+    peak_device_bytes = arg_b + out_b + tmp_b - alias_b
+    # The CPU backend upcasts bf16 dot operands/stashes to f32 (native on
+    # TPU), so measured temp overstates TPU HBM. Report an analytic
+    # TPU-native temp estimate alongside (methodology in EXPERIMENTS.md).
+    tmp_analytic = _analytic_temp(cfg, shape, mesh)
+    peak_analytic = arg_b + out_b + tmp_analytic
+
+    model_flops = _model_flops(cfg, shape)
+    cell.update({
+        "status": "ok",
+        "chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collectives": coll,
+        "memory": {"argument": arg_b, "output": out_b, "temp": tmp_b,
+                   "alias": alias_b, "peak_per_device": peak_device_bytes,
+                   "temp_analytic": tmp_analytic,
+                   "peak_analytic": peak_analytic,
+                   "hbm_per_chip": HBM_PER_CHIP,
+                   "fits": bool(peak_device_bytes <= HBM_PER_CHIP),
+                   "fits_analytic": bool(peak_analytic <= HBM_PER_CHIP)},
+        "roofline": {
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_collective,
+            "bottleneck": max(
+                (("compute", t_compute), ("memory", t_memory),
+                 ("collective", t_collective)), key=lambda kv: kv[1])[0],
+        },
+        "model_flops_global": model_flops,
+        "useful_flops_ratio": (model_flops / (flops * n_chips)
+                               if flops else 0.0),
+    })
+    if save_hlo:
+        Path(out_dir).mkdir(parents=True, exist_ok=True)
+        hlo_path = Path(out_dir) / f"{arch}__{shape_name}__{mesh_name}{tag}.hlo"
+        hlo_path.write_text(text)
+        cell["hlo_path"] = str(hlo_path)
+    return cell
+
+
+def _analytic_temp(cfg, shape, mesh) -> int:
+    """TPU-native temp estimate: remat stash + CE buffers + ~4 per-layer
+    transients, at bf16 (f32 for softmax/CE), under the baseline sharding."""
+    msize = mesh.shape["model"]
+    dsize = mesh.size // msize
+    B = max(1, shape.global_batch // dsize)
+    if shape.kind == "train":
+        B = max(1, B // max(1, cfg.microbatches))
+    if shape.kind == "decode":
+        # decode temps are tiny next to weights/cache (both in args)
+        return 64 << 20
+    S = shape.seq_len
+    d = cfg.d_model
+    S_loc = max(1, S // msize) if shape.kind == "train" else S
+    # remat stash
+    if cfg.family == "vlm":
+        n_entries = cfg.num_layers // cfg.cross_attn_every
+    else:
+        n_entries = max(1, cfg.num_layers // max(1, cfg.remat_span))
+    stash = n_entries * B * S_loc * d * 2 * (2 if shape.kind == "train" else 0)
+    # CE / logits (train) or logits (prefill)
+    v_loc = max(1, cfg.vocab_size // msize)
+    ce = B * S * v_loc * (8 if shape.kind == "train" else 2)
+    # per-layer transients (~4 largest intermediates co-resident)
+    ff_loc = max(cfg.d_ff, cfg.moe_d_ff * (cfg.num_experts or 1) // 4,
+                 cfg.d_inner * (2 if cfg.ssm_state else 0)) // msize
+    trans = 4 * B * S * max(ff_loc, d) * 2
+    if shape.kind == "train":
+        trans *= 2  # fwd + bwd cotangent
+    return int(stash + ce + trans)
+
+
+def _model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D for train, 2*N*D for inference forward
+    (N = active params, D = tokens processed this step)."""
+    n = cfg.param_count()
+    if cfg.num_experts:
+        # active experts only: replace full expert count by top_k (+ shared)
+        full = cfg.num_experts
+        active = cfg.top_k
+        expert_p = (3 if cfg.ffn_gated else 2) * cfg.d_model * cfg.moe_d_ff
+        n = n - cfg.num_layers * (full - active) * expert_p
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return float(mult * n * tokens)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    ap.add_argument("--no-ep", dest="ep", action="store_false")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPE_ORDER) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                cell = run_cell(arch, shape, multi, fsdp=args.fsdp,
+                                expert_parallel=args.ep, save_hlo=args.save_hlo,
+                                out_dir=args.out, tag=args.tag)
+                name = f"{arch}__{shape}__{cell['mesh']}{args.tag}"
+                (out_dir / f"{name}.json").write_text(json.dumps(cell, indent=1))
+                st = cell["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "FAILED"
+                if st == "ok":
+                    r = cell["roofline"]
+                    mem_gb = cell["memory"]["peak_per_device"] / 2**30
+                    mem_a = cell["memory"]["peak_analytic"] / 2**30
+                    print(f"{name:64s} OK  compile={cell['compile_s']:6.1f}s "
+                          f"mem/dev={mem_gb:5.2f}GiB (tpu-est {mem_a:5.2f}) "
+                          f"fits={cell['memory']['fits_analytic']} "
+                          f"bottleneck={r['bottleneck']:10s} "
+                          f"[{r['compute_s']:.2e}/{r['memory_s']:.2e}/{r['collective_s']:.2e}]s",
+                          flush=True)
+                elif st == "skipped":
+                    print(f"{name:64s} SKIP ({cell['reason']})", flush=True)
+                else:
+                    print(f"{name:64s} FAIL {cell['error']}", flush=True)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Post-SPMD HLO analysis: collective inventory + wire-byte estimates.
+
+``compiled.as_text()`` is the per-device program (local shapes). For each
+collective op we record operand bytes and estimate wire bytes per device
+assuming ring algorithms:
+
+    all-reduce(S):        2 * S * (N-1)/N
+    all-gather(result R): R * (N-1)/N           (each device receives R-R/N)
+    reduce-scatter(S_in): S_in * (N-1)/N
+    all-to-all(S):        S * (N-1)/N
+    collective-permute(S): S
+
+N = replica-group size parsed from the op.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-gather.3 = bf16[16,512]{1,0} all-gather(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\](?:\{[^}]*\})?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> Dict:
+    """Returns {op: {count, result_bytes, wire_bytes}} + totals (per device)."""
+    stats = defaultdict(lambda: {"count": 0, "result_bytes": 0, "wire_bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tuple_body, dtype, dims, op = m.groups()
+        if tuple_body is not None:
+            rb = sum(_shape_bytes(d, s) for d, s in _TUPLE_ELEM_RE.findall(tuple_body))
+        else:
+            rb = _shape_bytes(dtype, dims)
+        n = max(2, _group_size(line, default_group))
+        frac = (n - 1) / n
+        if op == "all-reduce":
+            wire = int(2 * rb * frac)
+        elif op == "all-gather":
+            wire = int(rb * frac)
+        elif op == "reduce-scatter":
+            wire = int(rb * n * frac)  # operand = result * N
+        elif op == "all-to-all":
+            wire = int(rb * frac)
+        else:  # collective-permute
+            wire = rb
+        s = stats[op]
+        s["count"] += 1
+        s["result_bytes"] += rb
+        s["wire_bytes"] += wire
+    out = dict(stats)
+    out["total_wire_bytes"] = sum(s["wire_bytes"] for s in stats.values())
+    out["total_count"] = sum(s["count"] for s in stats.values())
+    return out
+
+
+def count_ops(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

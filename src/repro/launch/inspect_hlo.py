@@ -1,0 +1,61 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Dump the largest per-device tensors in a compiled dry-run cell.
+
+PYTHONPATH=src python -m repro.launch.inspect_hlo --arch X --shape Y [--multi]
+"""
+import argparse  # noqa: E402
+import re        # noqa: E402
+
+import jax       # noqa: E402
+
+from repro.configs import SHAPES, get_config                    # noqa: E402
+from repro.launch import steps as steps_mod                     # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.models.layers import set_logical_rules               # noqa: E402
+
+DT = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4, "u32": 4,
+      "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def top_tensors(text: str, n: int = 14):
+    sizes = {}
+    for m in re.finditer(r"(\w+)\[([\d,]+)\]", text):
+        dt, dims = m.groups()
+        if dt not in DT:
+            continue
+        cnt = 1
+        for d in dims.split(","):
+            cnt *= int(d)
+        sizes[f"{dt}[{dims}]"] = cnt * DT[dt]
+    return sorted(sizes.items(), key=lambda kv: -kv[1])[:n]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--no-fsdp", dest="fsdp", action="store_false")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi)
+    step, sargs, in_sp, out_sp, plan = steps_mod.build_step(
+        cfg, SHAPES[args.shape], mesh, fsdp=args.fsdp)
+    set_logical_rules(plan.rules())
+    with jax.set_mesh(mesh):
+        compiled = jax.jit(step, in_shardings=in_sp,
+                           out_shardings=out_sp).lower(*sargs).compile()
+    mem = compiled.memory_analysis()
+    print(f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+          f"args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+          f"out={mem.output_size_in_bytes/2**30:.2f}GiB")
+    for k, v in top_tensors(compiled.as_text()):
+        print(f"{v/2**30:8.2f} GiB  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,319 @@
+"""Sharding rules: logical axes -> mesh axes, param/batch/cache specs.
+
+Strategy (baseline, MaxText-style rules; per-arch overrides via
+``ModelConfig.sharding_overrides`` and hillclimb levers via keyword args):
+
+* train: batch over ('pod','data'); FSDP over 'data' (weights' d_model dim);
+  tensor-parallel over 'model' (heads / d_ff / experts / vocab). Optimizer
+  moments shard like their weights (ZeRO-3).
+* serve: batch over data axes, TP over 'model'; decode KV cache shards batch
+  over 'data' and heads (or sequence, when heads don't divide) over 'model'.
+* MoE: expert-parallel over 'model' when num_experts divides it, else
+  tensor-parallel inside each expert (expert_ff).
+
+All decisions check divisibility and degrade to replication rather than rely
+on GSPMD padding, except vocab dims where padding waste is negligible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Resolved mesh-axis assignments for one (cfg, mesh) pair."""
+    batch_axes: Tuple[str, ...]
+    fsdp_axes: Optional[Tuple[str, ...]]     # None = no FSDP (serving)
+    model_size: int
+    heads: Optional[str]
+    kv_heads: Optional[str]
+    q_seq: Optional[str]                     # sequence-parallel attention when
+                                             # heads don't divide the model axis
+    act_seq: Optional[str]                   # sequence parallelism for the
+                                             # residual stream at layer edges
+    ff: Optional[str]
+    expert: Optional[str]
+    expert_ff: Optional[str]
+    vocab: Optional[str]
+    kv_seq: Optional[str]                    # decode cache sequence sharding
+    ssd_heads: Optional[str]
+
+    def rules(self) -> dict:
+        """Activation logical-constraint rules (see models.layers)."""
+        def t(a):
+            return (a,) if isinstance(a, str) else a
+        return {
+            "batch": t(self.batch_axes),
+            "heads": t(self.heads),
+            "kv_heads": t(self.kv_heads),
+            "q_seq": t(self.q_seq),
+            "act_seq": t(self.act_seq),
+            "ff": t(self.ff),
+            "expert": t(self.expert),
+            "expert_ff": t(self.expert_ff),
+            "vocab": t(self.vocab),
+            "kv_seq": t(self.kv_seq),
+        }
+
+
+def make_plan(cfg: ModelConfig, mesh, *, mode: str = "train",
+              fsdp: bool = True, expert_parallel: bool = True,
+              vocab_tp: bool = True, seq_parallel: bool = True) -> ShardingPlan:
+    msize = mesh.shape["model"]
+    multi = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi else ("data",)
+    div = lambda n: n and n % msize == 0  # noqa: E731
+
+    heads = "model" if div(cfg.num_heads) else None
+    # Unshardable head counts (smollm: 9H): replicate attention internals over
+    # 'model' — measured cheaper than sequence-parallel attention, whose
+    # score contraction partial-sums into ~288 MiB all-reduces per chunk.
+    q_seq = None
+    kv_heads = "model" if div(cfg.num_kv_heads) else None
+    expert = "model" if (expert_parallel and div(cfg.num_experts)) else None
+    expert_ff = None if expert else ("model" if div(cfg.moe_d_ff) else None)
+    # Sequence parallelism (Megatron-SP): residual stream shards its seq dim
+    # over 'model' at layer boundaries, so the per-layer remat stash
+    # [L, B, S, d] is 1/TP the size. Train only (decode has S=1).
+    act_seq = "model" if (seq_parallel and mode == "train") else None
+    return ShardingPlan(
+        batch_axes=batch_axes,
+        # Weights shard over BOTH axes in serve too (ZeRO-inference): TP alone
+        # cannot hold a 140B model in 16 GiB/chip; the per-layer all-gather
+        # is the price of fitting and shows up in the collective term.
+        fsdp_axes=("data",) if fsdp else None,
+        model_size=msize,
+        heads=heads,
+        kv_heads=kv_heads,
+        q_seq=q_seq,
+        act_seq=act_seq,
+        ff="model" if div(cfg.d_ff) else None,
+        expert=expert,
+        expert_ff=expert_ff,
+        vocab="model" if vocab_tp else None,   # padding allowed (uneven vocabs)
+        # decode KV cache: shard heads when they divide, else the sequence dim
+        kv_seq=None if kv_heads else "model",
+        ssd_heads="model" if div(cfg.ssm_heads) else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(plan: ShardingPlan, prefix: Tuple[Optional[str], ...]) -> dict:
+    f = plan.fsdp_axes[0] if plan.fsdp_axes else None
+    h, k = plan.heads, plan.kv_heads
+    specs = {
+        "wq": P(*prefix, f, h, None),
+        "wk": P(*prefix, f, k, None),
+        "wv": P(*prefix, f, k, None),
+        "wo": P(*prefix, h, None, f),
+    }
+    specs["bq"] = P(*prefix, h, None)
+    specs["bk"] = P(*prefix, k, None)
+    specs["bv"] = P(*prefix, k, None)
+    return specs
+
+
+def _ffn_specs(plan: ShardingPlan, prefix) -> dict:
+    f = plan.fsdp_axes[0] if plan.fsdp_axes else None
+    return {
+        "w1": P(*prefix, f, plan.ff),
+        "w3": P(*prefix, f, plan.ff),
+        "w2": P(*prefix, plan.ff, f),
+    }
+
+
+def _moe_specs(plan: ShardingPlan, prefix) -> dict:
+    f = plan.fsdp_axes[0] if plan.fsdp_axes else None
+    e, eff = plan.expert, plan.expert_ff
+    return {
+        "router": P(*prefix, f, None),
+        "w1": P(*prefix, e, f, eff),
+        "w3": P(*prefix, e, f, eff),
+        "w2": P(*prefix, e, eff, f),
+        "shared_w1": P(*prefix, f, plan.ff),
+        "shared_w3": P(*prefix, f, plan.ff),
+        "shared_w2": P(*prefix, plan.ff, f),
+    }
+
+
+def _ssd_specs(plan: ShardingPlan, prefix) -> dict:
+    f = plan.fsdp_axes[0] if plan.fsdp_axes else None
+    sh = plan.ssd_heads  # shards d_inner-derived dims (heads * head_dim)
+    return {
+        "z_proj": P(*prefix, f, sh),
+        "x_proj": P(*prefix, f, sh),
+        "b_proj": P(*prefix, f, None),
+        "c_proj": P(*prefix, f, None),
+        "dt_proj": P(*prefix, f, sh),
+        "conv_x": P(*prefix, None, sh),
+        "conv_x_b": P(*prefix, sh),
+        "conv_b": P(*prefix, None, None),
+        "conv_b_b": P(*prefix, None),
+        "conv_c": P(*prefix, None, None),
+        "conv_c_b": P(*prefix, None),
+        "A_log": P(*prefix, sh),
+        "D": P(*prefix, sh),
+        "dt_bias": P(*prefix, sh),
+        "out_proj": P(*prefix, sh, f),
+    }
+
+
+def _block_specs(cfg: ModelConfig, plan: ShardingPlan, stacked: bool) -> dict:
+    prefix: Tuple[Optional[str], ...] = (None,) if stacked else ()
+    specs: dict = {"ln1": P(*prefix, None)}
+    if cfg.family in ("ssm", "hybrid"):
+        specs["ssd"] = _ssd_specs(plan, prefix)
+        return specs
+    specs["attn"] = _attn_specs(plan, prefix)
+    specs["ln2"] = P(*prefix, None)
+    if cfg.family == "moe":
+        specs["moe"] = _moe_specs(plan, prefix)
+    else:
+        specs["mlp"] = _ffn_specs(plan, prefix)
+    return specs
+
+
+def param_specs(cfg: ModelConfig, plan: ShardingPlan, abstract) -> dict:
+    """PartitionSpec tree matching ``abstract_params(cfg)``; pruned to the
+    keys that actually exist (qkv bias, gated w3, tied head...)."""
+    f = plan.fsdp_axes[0] if plan.fsdp_axes else None
+    # pjit *argument* shardings must divide evenly (unlike internal
+    # constraints): uneven vocabs (49155, 50280, 504) fall back to FSDP on d.
+    vocab_ok = cfg.vocab_size % plan.model_size == 0
+    v = plan.vocab if vocab_ok else None
+    full = {
+        "embed": P(v, "data" if (not vocab_ok and f) else None),
+        "blocks": _block_specs(cfg, plan, stacked=True),
+        "final_norm": P(None),
+        "lm_head": P(f, v),
+    }
+    if cfg.family == "hybrid":
+        shared = {"ln1": P(None), "ln2": P(None),
+                  "attn": _attn_specs(plan, ()),
+                  "mlp": _ffn_specs(plan, ())}
+        full["shared"] = shared
+    if cfg.family == "vlm":
+        full["cross"] = {"ln": P(None, None),
+                         "attn": _attn_specs(plan, (None,)),
+                         "gate": P(None)}
+    return _prune_to(abstract, full)
+
+
+def _prune_to(abstract, specs):
+    """Keep only spec entries whose path exists in the abstract tree."""
+    if isinstance(abstract, dict):
+        return {k: _prune_to(v, specs[k]) for k, v in abstract.items()}
+    if isinstance(abstract, (list, tuple)):
+        return type(abstract)(_prune_to(v, specs) for v in abstract)
+    return specs  # leaf: specs is the P for this leaf (or subtree broadcast)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / state specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, plan: ShardingPlan, kind: str,
+                global_batch: int = 0) -> dict:
+    b = plan.batch_axes
+    if global_batch and global_batch % _axes_size(plan, b) != 0:
+        b = None  # e.g. long_500k batch=1: replicate batch dim
+    if kind == "decode":
+        specs = {"tokens": P(b, None), "pos": P()}
+        return specs
+    specs = {}
+    if cfg.family == "encoder":
+        specs["frames"] = P(b, None, None)
+    else:
+        specs["tokens"] = P(b, None)
+    if kind == "train":
+        specs["labels"] = P(b, None)
+    if cfg.family == "vlm":
+        specs["images"] = P(b, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, plan: ShardingPlan, abstract_cache) -> dict:
+    """Specs for the decode cache pytree (built by transformer.init_cache)."""
+    b = plan.batch_axes if len(plan.batch_axes) == 1 else plan.batch_axes
+    # decode long_500k has batch 1 -> batch axes won't divide; replicate batch
+    kv_b = b
+    specs: dict = {}
+    if "kv" in abstract_cache:
+        k_leaf = abstract_cache["kv"]["k"]
+        bdim = k_leaf.shape[1]
+        kv_batch = kv_b if bdim % _axes_size(plan, kv_b) == 0 else None
+        khead = plan.kv_heads
+        kseq = None if khead else plan.kv_seq
+        specs["kv"] = {
+            "k": P(None, kv_batch, kseq, khead, None),
+            "v": P(None, kv_batch, kseq, khead, None),
+            "pos": P(None, kv_batch, kseq),
+            "valid": P(None, kv_batch, kseq),
+        }
+    if "ssd" in abstract_cache:
+        sb = abstract_cache["ssd"]["state"].shape[1]
+        sbatch = kv_b if sb % _axes_size(plan, kv_b) == 0 else None
+        sh = plan.ssd_heads
+        specs["ssd"] = {
+            "state": P(None, sbatch, sh, None, None),
+            "conv_x": P(None, sbatch, None, sh),
+            "conv_b": P(None, sbatch, None, None),
+            "conv_c": P(None, sbatch, None, None),
+        }
+    if "cross_kv" in abstract_cache:
+        cb = abstract_cache["cross_kv"]["k"].shape[1]
+        cbatch = kv_b if cb % _axes_size(plan, kv_b) == 0 else None
+        specs["cross_kv"] = {
+            "k": P(None, cbatch, None, plan.kv_heads, None),
+            "v": P(None, cbatch, None, plan.kv_heads, None),
+        }
+    return specs
+
+
+def _axes_size(plan: ShardingPlan, axes) -> int:
+    # mesh sizes: data=16, pod=2 fixed for the production mesh
+    size = 1
+    for a in axes or ():
+        size *= {"pod": 2, "data": 16, "model": plan.model_size}[a]
+    return size
+
+
+def state_specs(param_sp: dict) -> dict:
+    """Train-state specs: optimizer moments shard like params (ZeRO-3)."""
+    return {"params": param_sp,
+            "opt": {"m": param_sp, "v": param_sp},
+            "step": P()}
+
+
+def to_shardings(mesh, spec_tree, abstract):
+    """PartitionSpec tree -> NamedSharding tree shaped like ``abstract``."""
+    def build(s, a):
+        return NamedSharding(mesh, s)
+    return jax.tree.map(build, _broadcast_specs(spec_tree, abstract), abstract,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _broadcast_specs(specs, abstract):
+    """Broadcast a spec subtree (single P for a dict of leaves) to tree shape."""
+    if isinstance(specs, P):
+        return jax.tree.map(lambda _: specs, abstract)
+    if isinstance(abstract, dict):
+        return {k: _broadcast_specs(specs[k], abstract[k]) for k in abstract}
+    if isinstance(abstract, (list, tuple)):
+        if isinstance(specs, (list, tuple)):
+            return type(abstract)(_broadcast_specs(s, a) for s, a in zip(specs, abstract))
+        return type(abstract)(_broadcast_specs(specs, a) for a in abstract)
+    return specs

@@ -1,0 +1,149 @@
+"""Step functions + abstract inputs for every (arch x shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every model
+input (no allocation); ``build_step`` returns the jit-able step function and
+matching (in_specs, in_shardings) for lowering on a production mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch import sharding as sh
+from repro.models import transformer as T
+from repro.optim import AdamW
+
+ACT_DTYPE = jnp.bfloat16
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the data inputs of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32), "pos": sds((), jnp.int32)}
+    batch = {}
+    if cfg.family == "encoder":
+        batch["frames"] = sds((B, S, cfg.d_model), ACT_DTYPE)
+    else:
+        batch["tokens"] = sds((B, S), jnp.int32)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        batch["images"] = sds((B, cfg.num_image_tokens, cfg.d_model), ACT_DTYPE)
+    return batch
+
+
+def abstract_state(cfg: ModelConfig, optimizer) -> dict:
+    params = T.abstract_params(cfg, dtype=ACT_DTYPE)
+    opt = jax.eval_shape(optimizer.init, params)
+    return {"params": params, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return jax.eval_shape(
+        functools.partial(T.init_cache, cfg, shape.global_batch, shape.seq_len,
+                          dtype=ACT_DTYPE))
+
+
+def quantize_params_abstract(params):
+    """ShapeDtypeStructs for int8 per-tensor-quantized serving weights:
+    each bf16 matrix becomes (int8 payload, f32 scale). Norms/vectors stay
+    bf16 (tiny, precision-sensitive)."""
+    def q(p):
+        if p.ndim >= 2:
+            return {"q": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                    "s": jax.ShapeDtypeStruct((), jnp.float32)}
+        return p
+    return jax.tree.map(q, params)
+
+
+def dequantize_params(qparams, dtype=ACT_DTYPE):
+    def dq(p):
+        if isinstance(p, dict) and "q" in p:
+            return p["q"].astype(dtype) * p["s"].astype(dtype)
+        return p
+    return jax.tree.map(dq, qparams,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               fsdp: bool = True, expert_parallel: bool = True,
+               remat: bool = True, serve_int8: bool = False,
+               seq_parallel=None) -> Tuple:
+    """Returns (step_fn, abstract_args, in_shardings, out_shardings, plan)."""
+    sp = cfg.seq_parallel if seq_parallel is None else seq_parallel
+    plan = sh.make_plan(cfg, mesh, mode="train" if shape.kind == "train" else "serve",
+                        fsdp=fsdp, expert_parallel=expert_parallel,
+                        seq_parallel=sp)
+    batch_sp = sh.batch_specs(cfg, plan, shape.kind, shape.global_batch)
+    data = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        optimizer = AdamW(lr=1e-4, weight_decay=0.1)
+        state = abstract_state(cfg, optimizer)
+        psp = sh.param_specs(cfg, plan, state["params"])
+        ssp = sh.state_specs(psp)
+        from repro.optim import make_train_step
+
+        def loss(p, b):
+            return T.loss_fn(p, b, cfg)
+
+        # Pin gradient shardings to the param specs: keeps the embedding-
+        # gather backward (scatter-add) from materializing an unsharded
+        # [V, d] f32 gradient buffer.
+        grad_specs = sh._broadcast_specs(psp, state["params"])
+        def constrain_grads(grads):
+            return jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_specs)
+        step = make_train_step(loss, optimizer, grad_transform=constrain_grads,
+                               microbatches=cfg.microbatches)
+        args = (state, data)
+        in_sp = (ssp, batch_sp)
+        out_sp = (ssp, {"loss": P(), "grad_norm": P()})
+        return step, args, in_sp, out_sp, plan
+
+    params = T.abstract_params(cfg, dtype=ACT_DTYPE)
+    psp = sh.param_specs(cfg, plan, params)
+
+    vocab_out = plan.vocab if cfg.vocab_size % plan.model_size == 0 else None
+
+    if shape.kind == "prefill":
+        def step(p, b):
+            logits, _, _ = T.forward(p, b, cfg, mode="prefill")
+            return logits
+        args = (params, data)
+        in_sp = (psp, batch_sp)
+        out_sp = P(plan.batch_axes, None, vocab_out)
+        return step, args, in_sp, out_sp, plan
+
+    # decode
+    cache = abstract_cache(cfg, shape)
+    csp = sh.cache_specs(cfg, plan, cache)
+
+    if serve_int8:
+        # beyond-paper: int8 weight serving (the paper's row-wise embedding
+        # quantization theme, applied to the LM's weight stream) — HBM reads
+        # for the (memory-bound) decode step halve.
+        qparams = quantize_params_abstract(params)
+        qpsp = jax.tree.map(
+            lambda p, s: ({"q": s, "s": P()} if isinstance(p, dict) else s),
+            qparams, sh._broadcast_specs(psp, params),
+            is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+        def step(qp, c, b):
+            return T.decode_step(dequantize_params(qp), c, b, cfg)
+        args = (qparams, cache, data)
+        in_sp = (qpsp, csp, batch_sp)
+    else:
+        def step(p, c, b):
+            return T.decode_step(p, c, b, cfg)
+        args = (params, cache, data)
+        in_sp = (psp, csp, batch_sp)
+    out_sp = (P(plan.batch_axes if shape.global_batch > 1 else None, None, vocab_out), csp)
+    return step, args, in_sp, out_sp, plan

@@ -1,0 +1,134 @@
+"""DLRM (paper Fig. 2): bottom MLP -> embeddings -> interaction -> top MLP.
+
+Trainable JAX implementation used by the end-to-end example and tests. The
+serving path swaps the plain-JAX embedding gather for the SDM store (user
+tables on SM with the FM cache; item tables in FM) and the fused Pallas
+``gather_pool`` kernel for dequant+pool.
+
+Inference batching matches §2.2: user embeddings are looked up once per query
+(B_U = 1) and broadcast across the item batch for the Top MLP (Eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, logical_constraint
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMArch:
+    """Concrete trainable geometry (the paper's Table 6 entries are serving
+    descriptions; this is the train/e2e-example form)."""
+    num_dense: int = 13
+    embed_dim: int = 64
+    user_tables: Sequence[int] = (100_000,) * 8   # rows per user table
+    item_tables: Sequence[int] = (100_000,) * 4   # rows per item table
+    pooling: int = 8                               # indices per bag (fixed)
+    bottom_mlp: Sequence[int] = (256, 128, 64)
+    top_mlp: Sequence[int] = (256, 128, 1)
+
+    @property
+    def num_tables(self) -> int:
+        return len(self.user_tables) + len(self.item_tables)
+
+    @property
+    def all_tables(self):
+        return tuple(self.user_tables) + tuple(self.item_tables)
+
+    def param_count(self) -> int:
+        n = sum(r * self.embed_dim for r in self.all_tables)
+        dims = [self.num_dense] + list(self.bottom_mlp)
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        f = self.num_tables + 1
+        top_in = self.bottom_mlp[-1] + f * (f - 1) // 2
+        dims = [top_in] + list(self.top_mlp)
+        n += sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return n
+
+
+def _init_mlp(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": dense_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype),
+             "b": jnp.zeros((dims[i + 1],), dtype)} for i in range(len(dims) - 1)]
+
+
+def _mlp(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def init_params(arch: DLRMArch, key, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3 + arch.num_tables)
+    tables = [(jax.random.normal(ks[3 + i], (rows, arch.embed_dim)) /
+               jnp.sqrt(arch.embed_dim)).astype(dtype)
+              for i, rows in enumerate(arch.all_tables)]
+    dims_b = [arch.num_dense] + list(arch.bottom_mlp)
+    f = arch.num_tables + 1
+    top_in = arch.bottom_mlp[-1] + f * (f - 1) // 2
+    dims_t = [top_in] + list(arch.top_mlp)
+    return {
+        "bottom": _init_mlp(ks[0], dims_b, dtype),
+        "top": _init_mlp(ks[1], dims_t, dtype),
+        "tables": tables,
+    }
+
+
+def embed_bags(tables, indices: jax.Array) -> jax.Array:
+    """indices: [T, B, P] -> pooled [B, T, E] (sum pooling, as SparseLengthsSum)."""
+    pooled = []
+    for t, table in enumerate(tables):
+        rows = jnp.take(table, indices[t], axis=0)   # [B, P, E]
+        pooled.append(jnp.sum(rows, axis=1))
+    return jnp.stack(pooled, axis=1)                  # [B, T, E]
+
+
+def interact(z0: jax.Array, emb: jax.Array) -> jax.Array:
+    """Dot-product interaction: z0 [B, E], emb [B, T, E] -> [B, E + T(T+1)/2]."""
+    feats = jnp.concatenate([z0[:, None, :], emb], axis=1)   # [B, F, E]
+    gram = jnp.einsum("bfe,bge->bfg", feats, feats)
+    F = feats.shape[1]
+    iu, ju = jnp.triu_indices(F, k=1)
+    pairs = gram[:, iu, ju]                                   # [B, F(F-1)/2]
+    return jnp.concatenate([z0, pairs], axis=1)
+
+
+def forward(params: dict, batch: dict, arch: DLRMArch) -> jax.Array:
+    """batch: dense [B, num_dense], indices [T, B, P] -> CTR logit [B]."""
+    z0 = _mlp(params["bottom"], batch["dense"], final_act=True)
+    z0 = logical_constraint(z0, "batch", None)
+    emb = embed_bags(params["tables"], batch["indices"])
+    x = interact(z0, emb)
+    return _mlp(params["top"], x)[:, 0]
+
+
+def loss_fn(params: dict, batch: dict, arch: DLRMArch) -> jax.Array:
+    logit = forward(params, batch, arch)
+    y = batch["labels"].astype(jnp.float32)
+    # numerically-stable BCE-with-logits
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def serve_query(params: dict, user_idx: jax.Array, item_idx: jax.Array,
+                dense: jax.Array, arch: DLRMArch) -> jax.Array:
+    """Inference per §2.2: user bags once (B_U=1), broadcast over item batch.
+
+    user_idx: [Tu, P]; item_idx: [Ti, Bi, P]; dense: [Bi, num_dense].
+    Returns CTR scores [Bi].
+    """
+    n_user = len(arch.user_tables)
+    user_emb = embed_bags(params["tables"][:n_user], user_idx[:, None, :])  # [1, Tu, E]
+    Bi = dense.shape[0]
+    user_emb = jnp.broadcast_to(user_emb, (Bi,) + user_emb.shape[1:])
+    item_emb = embed_bags(params["tables"][n_user:], item_idx)              # [Bi, Ti, E]
+    emb = jnp.concatenate([user_emb, item_emb], axis=1)
+    z0 = _mlp(params["bottom"], dense, final_act=True)
+    x = interact(z0, emb)
+    return jax.nn.sigmoid(_mlp(params["top"], x)[:, 0])

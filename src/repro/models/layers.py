@@ -1,0 +1,369 @@
+"""Shared transformer layers: norms, RoPE, attention, FFN — pure functions.
+
+Parameters are plain pytrees (dicts of arrays). Layer stacks carry a leading
+``layers`` axis and are driven by ``jax.lax.scan`` so HLO size and compile time
+are independent of depth.
+
+Activation sharding is annotated through :func:`logical_constraint`, which maps
+logical axis names to mesh axes via the rules installed by
+``repro.launch.sharding.logical_rules`` (identity when no rules are active).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Logical sharding rules (installed by repro.launch.sharding)
+# ---------------------------------------------------------------------------
+
+_ACTIVE_RULES: Optional[dict] = None
+
+# Roofline instrumentation: when True, inner/layer scans fully unroll so
+# XLA cost_analysis counts every iteration (scan bodies are otherwise
+# counted once). Set by benchmarks/roofline.py for small-L cost probes.
+FULL_UNROLL = False
+
+
+def scan_unroll():
+    return True if FULL_UNROLL else 1
+
+
+def set_logical_rules(rules: Optional[dict]) -> None:
+    global _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+
+
+def get_logical_rules() -> Optional[dict]:
+    return _ACTIVE_RULES
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _cotangent_constraint(names_tuple, x):
+    return x
+
+
+def _cc_fwd(names_tuple, x):
+    return x, None
+
+
+def _cc_bwd(names_tuple, _, g):
+    return (logical_constraint(g, *names_tuple),)
+
+
+_cotangent_constraint.defvjp(_cc_fwd, _cc_bwd)
+
+
+def cotangent_constraint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Identity in forward; pins the COTANGENT's sharding in backward.
+
+    GSPMD does not reliably propagate seq-sharding hints onto backward
+    partial-sums (it emits full all-reduce + slice); pinning the cotangent
+    forces the cheaper reduce-scatter form.
+    """
+    if _ACTIVE_RULES is None:
+        return x
+    return _cotangent_constraint(tuple(names), x)
+
+
+def logical_constraint_exact(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Hard constraint: unmapped/None dims are REPLICATED (not unconstrained).
+
+    Used to force a single materialization point — e.g. gather the
+    seq-sharded SSD input once instead of once per projection einsum.
+    """
+    if _ACTIVE_RULES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    mesh_axes = [(_ACTIVE_RULES.get(n) or None) if n else None for n in names]
+    return jax.lax.with_sharding_constraint(x, P(*mesh_axes))
+
+
+def logical_constraint(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op without rules).
+
+    Dims whose logical name is None or unmapped stay UNCONSTRAINED — the
+    constraint pins only what it names and lets GSPMD propagate the rest.
+    """
+    if _ACTIVE_RULES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    mesh_axes = []
+    pinned = False
+    for n in names:
+        axes = _ACTIVE_RULES.get(n) if n else None
+        if axes:
+            mesh_axes.append(axes)
+            pinned = True
+        else:
+            mesh_axes.append(P.UNCONSTRAINED)
+    if not pinned:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*mesh_axes))
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # [head_dim // 2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] (int). Rotates pairs (even, odd)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, hd/2]
+    sin = jnp.sin(angles)[:, :, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention core (shared by train / prefill / decode; GQA via head groups)
+# ---------------------------------------------------------------------------
+
+
+ATTN_Q_CHUNK = 1024  # query-block size for the chunked (flash-style) path
+
+
+def _attn_block_math(q, k, v, q_pos, kv_pos, *, causal, sliding_window, kv_valid,
+                     scale):
+    """One dense attention block: q [B,Cq,H,hd] vs full kv [B,Skv,H,hd]."""
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = jnp.ones((q.shape[0], q.shape[1], k.shape[1]), bool)
+    dpos = q_pos[:, :, None] - kv_pos[:, None, :]      # [B, Cq, Skv]
+    if causal:
+        mask &= dpos >= 0
+    if sliding_window:
+        mask &= dpos < sliding_window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    scores = jnp.where(mask[:, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v.astype(probs.dtype))
+
+
+def attention_core(
+    q: jax.Array,           # [B, Sq, H, hd]
+    k: jax.Array,           # [B, Skv, K, hd]
+    v: jax.Array,           # [B, Skv, K, hd]
+    q_positions: jax.Array,  # [B, Sq]
+    kv_positions: jax.Array,  # [B, Skv]
+    *,
+    causal: bool = True,
+    sliding_window: int = 0,
+    kv_valid: Optional[jax.Array] = None,  # [B, Skv] bool; masks unwritten cache
+    q_chunk: int = ATTN_Q_CHUNK,
+) -> jax.Array:
+    """Masked softmax attention. GQA is handled by repeating KV to H heads
+    (reshape-free sharding: every tensor keeps a plain head axis that GSPMD
+    shards over 'model'). Long query spans are processed in chunks so the
+    [Cq, Skv] score block — not [Sq, Skv] — bounds live memory; softmax stays
+    exact because each query row sees the full KV span (no online rescaling
+    needed). On TPU the same contraction pattern maps to the Pallas
+    flash_decode kernel for Sq == 1 (kernels/ops.py)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    scale = 1.0 / math.sqrt(hd)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        out = _attn_block_math(q, k, v, q_positions, kv_positions, causal=causal,
+                               sliding_window=sliding_window, kv_valid=kv_valid,
+                               scale=scale)
+        return out.astype(q.dtype)
+
+    nq = Sq // q_chunk
+    qc = q.reshape(B, nq, q_chunk, H, hd).swapaxes(0, 1)          # [nq,B,Cq,H,hd]
+    pc = q_positions.reshape(B, nq, q_chunk).swapaxes(0, 1)       # [nq,B,Cq]
+
+    @jax.checkpoint  # backward recomputes this chunk's scores: peak memory is
+    def body(_, inp):  # one [Cq, Skv] block, never the stacked [Sq, Skv]
+        qi, pi = inp
+        oi = _attn_block_math(qi, k, v, pi, kv_positions, causal=causal,
+                              sliding_window=sliding_window, kv_valid=kv_valid,
+                              scale=scale)
+        return None, oi
+
+    _, out = jax.lax.scan(body, None, (qc, pc), unroll=scan_unroll())
+    return out.swapaxes(0, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def init_attention(key, cfg, *, cross: bool = False, dtype=jnp.float32) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), in_axis_size=d, dtype=dtype),
+        "wk": dense_init(ks[1], (d, K, hd), in_axis_size=d, dtype=dtype),
+        "wv": dense_init(ks[2], (d, K, hd), in_axis_size=d, dtype=dtype),
+        "wo": dense_init(ks[3], (H, hd, d), in_axis_size=H * hd, dtype=dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((K, hd), dtype)
+        p["bv"] = jnp.zeros((K, hd), dtype)
+    return p
+
+
+def attention_qkv(params: dict, x: jax.Array, kv_src: Optional[jax.Array] = None):
+    """Project hidden states to q (from x) and k, v (from kv_src or x)."""
+    src = x if kv_src is None else kv_src
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return q, k, v
+
+
+def attention_out(params: dict, attn: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", attn, params["wo"])
+
+
+def self_attention(
+    params: dict,
+    x: jax.Array,
+    positions: jax.Array,
+    cfg,
+    *,
+    kv_cache: Optional[dict] = None,
+    cache_index: Optional[jax.Array] = None,
+):
+    """Self-attention; with ``kv_cache`` (decode) the new KV is written at
+    ``cache_index`` and attention runs against the whole (masked) cache.
+
+    Returns (output [B,S,H*hd->d], updated kv_cache or None).
+    """
+    q, k, v = attention_qkv(params, x)
+    q = apply_rope(q, positions, cfg.rope_theta) if not cfg.is_encoder_only else q
+    k = apply_rope(k, positions, cfg.rope_theta) if not cfg.is_encoder_only else k
+    q = logical_constraint(q, "batch", "q_seq", "heads", None)
+    k = logical_constraint(k, "batch", "kv_seq" if kv_cache is not None else None, "kv_heads", None)
+
+    new_cache = None
+    if kv_cache is not None:
+        # decode / cached path: write new kv at cache_index, attend over cache
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        S_max = ck.shape[1]
+        if cfg.sliding_window and S_max <= cfg.sliding_window:
+            # ring-buffer cache sized to the window: slot = pos % S_max
+            slot = cache_index % S_max
+        else:
+            slot = cache_index
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        kv_pos = kv_cache["pos"]
+        kv_pos = jax.lax.dynamic_update_slice(
+            kv_pos, positions.astype(kv_pos.dtype)[:, : k.shape[1]], (0, slot)
+        )
+        valid = kv_cache["valid"]
+        valid = jax.lax.dynamic_update_slice(
+            valid, jnp.ones((valid.shape[0], k.shape[1]), valid.dtype), (0, slot)
+        )
+        new_cache = {"k": ck, "v": cv, "pos": kv_pos, "valid": valid}
+        attn = attention_core(
+            q, ck, cv, positions, kv_pos,
+            causal=cfg.causal, sliding_window=cfg.sliding_window,
+            kv_valid=valid.astype(bool),
+        )
+    else:
+        attn = attention_core(
+            q, k, v, positions, positions,
+            causal=cfg.causal, sliding_window=cfg.sliding_window,
+        )
+    out = attention_out(params, attn)
+    return logical_constraint(out, "batch", None, None), new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n: int = 1, dtype=jnp.bfloat16,
+                  keep_leading: bool = False) -> dict:
+    """KV cache pytree. ``n`` leading replicas (e.g. per shared-block call);
+    keep_leading retains the leading dim even for n == 1 (rank-stable caches
+    for hybrid archs at any probe depth)."""
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    if cfg.sliding_window:
+        max_len = min(max_len, cfg.sliding_window)
+    leading = n > 1 or keep_leading
+    shape = (batch, max_len, K, hd)
+    if leading:
+        shape = (n,) + shape
+    pos_shape = (n, batch, max_len) if leading else (batch, max_len)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "pos": jnp.zeros(pos_shape, jnp.int32),
+        "valid": jnp.zeros(pos_shape, jnp.int8),
+    }
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, d_model: int, d_ff: int, gated: bool, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w2": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+    if gated:
+        p["w3"] = dense_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def ffn(params: dict, x: jax.Array, gated: bool) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, params["w1"])
+    if gated:
+        h = jax.nn.silu(h) * jnp.einsum("bsd,df->bsf", x, params["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    h = logical_constraint(h, "batch", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, params["w2"])

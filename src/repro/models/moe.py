@@ -1,0 +1,130 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based GShard dispatch.
+
+Dispatch is the one-hot/capacity formulation (stable under GSPMD for the
+dry-run): tokens are grouped by sequence, each group dispatches to per-expert
+capacity slots, expert FFNs run as a batched einsum over the expert axis, and
+the combine einsum scatters results back. Compiled FLOPs scale with
+``top_k * tokens * capacity_factor`` (not ``num_experts * tokens``), so the
+roofline sees the *sparse* compute the architecture advertises.
+
+Sharding: the expert axis maps to the ``expert`` logical axis (expert-parallel
+when divisible by the mesh's model axis); otherwise the per-expert hidden dim
+maps to ``ff`` (tensor-parallel within each expert). Both are just rule entries.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, logical_constraint
+
+
+def init_moe(key, cfg, dtype=jnp.float32) -> dict:
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), dtype=dtype),
+        "w1": dense_init(ks[1], (E, d, f), in_axis_size=d, dtype=dtype),
+        "w2": dense_init(ks[2], (E, f, d), in_axis_size=f, dtype=dtype),
+    }
+    if cfg.ffn_gated:
+        p["w3"] = dense_init(ks[3], (E, d, f), in_axis_size=d, dtype=dtype)
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        p["shared_w1"] = dense_init(ks[4], (d, fs), dtype=dtype)
+        p["shared_w2"] = dense_init(ks[4], (fs, d), dtype=dtype)
+        if cfg.ffn_gated:
+            p["shared_w3"] = dense_init(ks[4], (d, fs), dtype=dtype)
+    return p
+
+
+def _topk_dispatch(gates: jax.Array, top_k: int, capacity: int):
+    """gates: [G, S, E] router probabilities.
+
+    Returns (dispatch [G, S, E, C] bool-ish float, combine [G, S, E, C]).
+    Slot assignment: tokens claim per-expert capacity slots in sequence order
+    (GShard policy); overflowing tokens are dropped for that expert.
+    """
+    G, S, E = gates.shape
+    dispatch = jnp.zeros((G, S, E, capacity), gates.dtype)
+    combine = jnp.zeros((G, S, E, capacity), gates.dtype)
+    # Running per-expert slot counters, updated across the k choices.
+    base_count = jnp.zeros((G, E), jnp.int32)
+    remaining = gates
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                      # [G, S]
+        val = jnp.take_along_axis(remaining, idx[..., None], -1)[..., 0]
+        onehot = jax.nn.one_hot(idx, E, dtype=gates.dtype)        # [G, S, E]
+        # position of each token within its chosen expert's slots
+        pos_in_expert = (jnp.cumsum(onehot, axis=1) - onehot)     # [G, S, E]
+        pos = (jnp.sum(pos_in_expert * onehot, axis=-1) + jnp.sum(
+            base_count[:, None, :] * onehot, axis=-1)).astype(jnp.int32)  # [G, S]
+        keep = pos < capacity
+        slot = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                              dtype=gates.dtype)                  # [G, S, C]
+        d_k = onehot[..., None] * slot[:, :, None, :]             # [G, S, E, C]
+        dispatch = dispatch + d_k
+        combine = combine + d_k * val[..., None, None]
+        base_count = base_count + jnp.sum(
+            onehot * keep[..., None].astype(gates.dtype), axis=1).astype(jnp.int32)
+        remaining = remaining * (1.0 - onehot)
+    return dispatch, combine
+
+
+GROUP_TOKENS = 256  # routing-group size: aligns with the act_seq shard so the
+                    # dispatch cumsum and capacity tensors stay shard-local
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg):
+    """x: [B, S, d] -> [B, S, d]. Routing groups are GROUP_TOKENS-token
+    windows (GShard-style groups): capacity is enforced per window, the
+    [G, S_g, E, C] dispatch tensor stays small, and under sequence
+    parallelism each window lives wholly in one shard."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    xg = x
+    ng = 1
+    if S > GROUP_TOKENS and S % GROUP_TOKENS == 0:
+        ng = S // GROUP_TOKENS
+        xg = x.reshape(B * ng, GROUP_TOKENS, d)
+    Sg = xg.shape[1]
+    capacity = max(k, int(cfg.moe_capacity_factor * Sg * k / E))
+
+    x, orig_shape = xg, (B, S, d)
+    logits = jnp.einsum("gsd,de->gse", x, params["router"])
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    dispatch, combine = _topk_dispatch(gates, k, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    dispatch = logical_constraint(dispatch, "batch", None, "expert", None)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, x)               # [G,E,C,d]
+    xe = logical_constraint(xe, "batch", "expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["w1"])
+    if cfg.ffn_gated:
+        h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", xe, params["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    h = logical_constraint(h, "batch", "expert", None, "expert_ff")
+    ye = jnp.einsum("gecf,efd->gecd", h, params["w2"])           # [G,E,C,d]
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)                # [G,S,d]
+
+    if cfg.num_shared_experts:
+        hs = jnp.einsum("gsd,df->gsf", x, params["shared_w1"])
+        if cfg.ffn_gated:
+            hs = jax.nn.silu(hs) * jnp.einsum("gsd,df->gsf", x, params["shared_w3"])
+        else:
+            hs = jax.nn.gelu(hs)
+        y = y + jnp.einsum("gsf,fd->gsd", hs, params["shared_w2"])
+
+    aux = _load_balance_loss(gates, dispatch)
+    y = y.reshape(orig_shape)
+    return logical_constraint(y, "batch", "act_seq", None), aux
+
+
+def _load_balance_loss(gates: jax.Array, dispatch: jax.Array) -> jax.Array:
+    """Switch-style auxiliary load-balancing loss."""
+    G, S, E = gates.shape
+    me = jnp.mean(gates, axis=(0, 1))                       # mean router prob
+    ce = jnp.mean(jnp.sum(dispatch, axis=-1), axis=(0, 1))  # fraction routed
+    return E * jnp.sum(me * ce.astype(me.dtype))

@@ -1,0 +1,194 @@
+"""Mamba2 / SSD (state-space duality) layer.
+
+Training / prefill use the chunked SSD algorithm (arXiv:2405.21060 §6):
+sequence is split into chunks of ``ssm_chunk``; intra-chunk terms are dense
+matmuls (the "attention-like" quadratic-within-chunk part, MXU-friendly) and
+inter-chunk terms propagate a per-head state of shape [hd, N] through a
+``lax.scan`` over chunks. Decode is the O(1) recurrent update.
+
+Projections are kept as *separate* weights (z/x/B/C/dt and per-stream convs)
+rather than one fused in_proj: depthwise conv and elementwise ops make the
+split mathematically identical, and it lets the head dimension shard over the
+mesh's model axis without resharding a fused output. d_inner = expand *
+d_model, heads = d_inner / ssm_head_dim, single B/C group (ngroups=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (dense_init, logical_constraint,
+                                 logical_constraint_exact, scan_unroll)
+
+
+def init_ssd(key, cfg, dtype=jnp.float32) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    W = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "z_proj": dense_init(ks[0], (d, di), dtype=dtype),
+        "x_proj": dense_init(ks[1], (d, di), dtype=dtype),
+        "b_proj": dense_init(ks[2], (d, N), dtype=dtype),
+        "c_proj": dense_init(ks[3], (d, N), dtype=dtype),
+        "dt_proj": dense_init(ks[4], (d, H), dtype=dtype),
+        "conv_x": dense_init(ks[5], (W, di), in_axis_size=W, dtype=dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_b": dense_init(ks[6], (W, N), in_axis_size=W, dtype=dtype),
+        "conv_b_b": jnp.zeros((N,), dtype),
+        "conv_c": dense_init(ks[7], (W, N), in_axis_size=W, dtype=dtype),
+        "conv_c_b": jnp.zeros((N,), dtype),
+        "A_log": jnp.zeros((H,), dtype),          # A = -exp(A_log) in (-inf, 0)
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: [B, S, C], w: [W, C]."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):  # W is 4: unrolled taps, stays a cheap fused op
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_forward(params: dict, u: jax.Array, cfg, initial_state=None):
+    """u: [B, S, d_model] -> (y [B, S, d_model], final_state [B, H, hd, N]).
+
+    Chunked SSD; S must be a multiple of ssm_chunk (callers pad).
+    """
+    B, S, d = u.shape
+    di, N, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:  # pad to a chunk multiple; padded outputs are trimmed below
+        pad = Q - S % Q
+        out, state = ssd_forward(
+            params, jnp.pad(u, ((0, 0), (0, pad), (0, 0))), cfg, initial_state)
+        return out[:, :S], state
+    nc = S // Q
+
+    # Gather the (seq-sharded) input ONCE: all five projections need the full
+    # sequence (channel-TP outputs); without this pin GSPMD emits a separate
+    # all-gather per einsum x per AD pass (~10 gathers/layer measured).
+    u = logical_constraint_exact(u, "batch", None, None)
+    z = jnp.einsum("bsd,dk->bsk", u, params["z_proj"])
+    x = _causal_conv(jnp.einsum("bsd,dk->bsk", u, params["x_proj"]),
+                     params["conv_x"], params["conv_x_b"])
+    Bm = _causal_conv(jnp.einsum("bsd,dn->bsn", u, params["b_proj"]),
+                      params["conv_b"], params["conv_b_b"])
+    Cm = _causal_conv(jnp.einsum("bsd,dn->bsn", u, params["c_proj"]),
+                      params["conv_c"], params["conv_c_b"])
+    dt = jnp.einsum("bsd,dh->bsh", u, params["dt_proj"])
+    x = logical_constraint(x, "batch", None, "ff")
+    x = x.reshape(B, S, H, hd)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))        # [H]
+    dA = dt * A                                              # [B, S, H]
+
+    # chunk views
+    xc = x.reshape(B, nc, Q, H, hd).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    dAc = dA.reshape(B, nc, Q, H)
+    dA_cs = jnp.cumsum(dAc, axis=2)                          # [B, nc, Q, H]
+
+    xdt = xc * dtc[..., None]                                # dt-weighted input
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    # L[i,j] = exp(dA_cs[i] - dA_cs[j]) for i >= j else 0
+    seg = dA_cs[:, :, :, None, :] - dA_cs[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)               # [B,nc,Q,Q]
+    M = CB[..., None] * L                                    # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)       # [B,nc,Q,H,hd]
+
+    # ---- chunk states ----
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)      # [B,nc,Q,H]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_to_end, xdt)
+
+    # ---- inter-chunk recurrence over chunk axis ----
+    chunk_decay = jnp.exp(jnp.sum(dAc, axis=2))              # [B,nc,H]
+    if initial_state is None:
+        h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    else:
+        h0 = initial_state.astype(jnp.float32)
+
+    def step(h, inp):
+        decay_c, state_c = inp                               # [B,H], [B,H,hd,N]
+        h_new = h * decay_c[..., None, None] + state_c
+        return h_new, h                                      # emit state *before* chunk
+
+    chunk_decay_t = jnp.moveaxis(chunk_decay, 1, 0)          # [nc,B,H]
+    states_t = jnp.moveaxis(states, 1, 0)                    # [nc,B,H,hd,N]
+    h_final, h_prevs = jax.lax.scan(step, h0, (chunk_decay_t, states_t),
+                                    unroll=scan_unroll())
+    h_prev = jnp.moveaxis(h_prevs, 0, 1)                     # [B,nc,H,hd,N]
+
+    # ---- inter-chunk output ----
+    in_decay = jnp.exp(dA_cs)                                # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, in_decay, h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, H, hd)
+    y = y + xc.reshape(B, S, H, hd) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    y = logical_constraint(y, "batch", None, "ff")
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    return out, h_final.astype(u.dtype)
+
+
+def init_ssd_cache(cfg, batch: int, dtype=jnp.bfloat16) -> dict:
+    H, hd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    W = cfg.ssm_conv
+    return {
+        "state": jnp.zeros((batch, H, hd, N), dtype),
+        "conv_x": jnp.zeros((batch, W - 1, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, W - 1, N), dtype),
+        "conv_c": jnp.zeros((batch, W - 1, N), dtype),
+    }
+
+
+def _conv_step(buf, new, w, b):
+    """buf: [B, W-1, C] rolling history; new: [B, C]. Returns (out, new_buf)."""
+    full = jnp.concatenate([buf.astype(new.dtype), new[:, None, :]], axis=1)
+    out = jax.nn.silu(jnp.einsum("bwc,wc->bc", full, w) + b)
+    return out, full[:, 1:]
+
+
+def ssd_decode_step(params: dict, u: jax.Array, cache: dict, cfg):
+    """u: [B, 1, d_model]; O(1) recurrent update. Returns (y, new_cache)."""
+    B = u.shape[0]
+    di, N, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    z = jnp.einsum("bsd,dk->bsk", u, params["z_proj"])
+    x_raw = jnp.einsum("bsd,dk->bsk", u, params["x_proj"])[:, 0]
+    b_raw = jnp.einsum("bsd,dn->bsn", u, params["b_proj"])[:, 0]
+    c_raw = jnp.einsum("bsd,dn->bsn", u, params["c_proj"])[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", u, params["dt_proj"])[:, 0]
+
+    x, new_cx = _conv_step(cache["conv_x"], x_raw, params["conv_x"], params["conv_x_b"])
+    Bm, new_cb = _conv_step(cache["conv_b"], b_raw, params["conv_b"], params["conv_b_b"])
+    Cm, new_cc = _conv_step(cache["conv_c"], c_raw, params["conv_c"], params["conv_c_b"])
+    x = x.reshape(B, H, hd)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                  # [B,H]
+
+    h = cache["state"].astype(jnp.float32)
+    dx = dt[..., None] * x.astype(jnp.float32)               # [B,H,hd]
+    h_new = h * decay[..., None, None] + jnp.einsum("bhp,bn->bhpn", dx, Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(u.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, params["out_proj"])
+    new_cache = {"state": h_new.astype(cache["state"].dtype),
+                 "conv_x": new_cx.astype(cache["conv_x"].dtype),
+                 "conv_b": new_cb.astype(cache["conv_b"].dtype),
+                 "conv_c": new_cc.astype(cache["conv_c"].dtype)}
+    return out, new_cache

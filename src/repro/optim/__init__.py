@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (  # noqa: F401
+    AdamW,
+    SGD,
+    TrainState,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    make_train_step,
+)
+from repro.optim.compression import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    ErrorFeedbackState,
+)

@@ -1,0 +1,51 @@
+"""Gradient compression for cross-pod data parallelism: int8 + error feedback.
+
+At 1000+ node scale the pod-level all-reduce rides the slowest links; 4x
+compression of the DP gradient exchange (bf16 -> int8 per-tensor-scaled) with
+error-feedback residual accumulation keeps convergence while cutting
+collective bytes. Used by the trainer when ``grad_compression=int8`` and
+counted by the roofline collective term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x: jax.Array):
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ErrorFeedbackState(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(grads, axis_name: str, ef_state):
+    """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
+
+    g_corrected = g + residual; q = Q(g_corrected); residual' = g_corrected - deq(q).
+    The exchange is an *int8 all-gather* + local sum (not an fp32 psum), so the
+    wire bytes are 1 B/element instead of ~8 B/element for an fp32 all-reduce —
+    the compression is visible to the roofline's collective term.
+    """
+    def one(g, ef):
+        gc = g.astype(jnp.float32) + ef
+        q, scale = compress_int8(gc)
+        new_ef = gc - decompress_int8(q, scale)
+        q_all = jax.lax.all_gather(q, axis_name)          # [N, ...] int8 on wire
+        s_all = jax.lax.all_gather(scale, axis_name)      # [N] fp32 (scalar)
+        summed = jnp.tensordot(s_all, q_all.astype(jnp.float32), axes=1)
+        return summed.astype(g.dtype), new_ef
+
+    out = jax.tree.map(one, grads, ef_state)
+    new_grads = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_ef

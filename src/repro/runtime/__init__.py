@@ -1,0 +1,2 @@
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401
+from repro.runtime.serve_sched import ServeScheduler, ServeConfig  # noqa: F401

@@ -1,0 +1,92 @@
+"""Serving scheduler: inter-op parallelism + IO/compute overlap (App. A.2).
+
+The paper's observation: embedding ops whose tables live on SM *block on IO*;
+executing them asynchronously alongside (a) other embedding ops and (b) the
+dense compute hides SM latency under item-side time (Eq. 3) — they report 20%
+latency reduction -> 20% QPS at iso-latency for M1.
+
+This scheduler models a host serving loop: per query it issues all SM-table
+IO batches up front (async, io_uring-style), runs FM-side work while they are
+in flight, and completes pooling as each IO batch lands. Admission control
+bounds in-flight IOs by the device's IOPS envelope (§4.1 Tuning API). Time is
+simulated from the analytic device model — the same code path a real host
+would drive with actual completions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.io_sim import DeviceModel, IOQueueConfig
+from repro.core.sdm import SDMEmbeddingStore
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    inter_op_parallel: bool = True        # A.2: async embedding ops
+    max_inflight_ios: int = 4096          # admission control
+    item_compute_us: float = 200.0        # dense/FM side per query
+    latency_target_us: float = 10_000.0
+
+
+@dataclasses.dataclass
+class QueryResult:
+    latency_us: float
+    sm_ios: int
+    admitted: bool = True
+
+
+class ServeScheduler:
+    def __init__(self, store: SDMEmbeddingStore, cfg: ServeConfig):
+        self.store = store
+        self.cfg = cfg
+        self.inflight = 0
+        self.p_lat: List[float] = []
+
+    def serve(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0) -> QueryResult:
+        """requests: {table_id: indices} for the user-side tables."""
+        cfg = self.cfg
+        io_batches = []
+        total_ios = 0
+        for tid, idx in requests.items():
+            r = self.store.lookup_pool(tid, idx, bg_iops)
+            if r["ios"]:
+                io_batches.append(r["latency_us"])
+                total_ios += r["ios"]
+
+        if self.inflight + total_ios > cfg.max_inflight_ios:
+            # admission control: defer (counted as one queueing delay unit)
+            return QueryResult(latency_us=cfg.latency_target_us, sm_ios=total_ios,
+                               admitted=False)
+
+        if cfg.inter_op_parallel:
+            # all embedding-op IO batches fly concurrently and overlap the
+            # dense compute: latency = max(compute, slowest IO) (Eq. 3)
+            sm_time = max(io_batches, default=0.0)
+            lat = max(cfg.item_compute_us, sm_time)
+        else:
+            # without inter-op async execution the embedding ops' IO is
+            # exposed serially after compute (the pre-A.2 operator runtime)
+            sm_time = max(io_batches, default=0.0)
+            lat = cfg.item_compute_us + sm_time
+        self.p_lat.append(lat)
+        return QueryResult(latency_us=lat, sm_ios=total_ios)
+
+    def percentile(self, p: float) -> float:
+        if not self.p_lat:
+            return 0.0
+        return float(np.percentile(np.asarray(self.p_lat), p))
+
+    def qps_at_latency(self, target_us: Optional[float] = None, p: float = 95.0) -> float:
+        """Feasible QPS: fraction of queries meeting the latency target scaled
+        by the ideal service rate (simulation-level Eq. 5)."""
+        target = target_us or self.cfg.latency_target_us
+        if not self.p_lat:
+            return 0.0
+        lat = np.asarray(self.p_lat)
+        meeting = (lat <= target).mean()
+        mean_lat = lat.mean()
+        return meeting * 1e6 / max(mean_lat, 1.0)

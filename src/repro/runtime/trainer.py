@@ -1,0 +1,108 @@
+"""Fault-tolerant training runtime.
+
+Production posture for 1000+ nodes, exercised here on the host backend:
+
+* **Checkpoint/restart** — atomic sharded checkpoints every N steps; restart
+  resumes bitwise (data stream is deterministic per (seed, step)).
+* **Failure injection** — a hook raising mid-run lets tests kill step K and
+  assert the restarted run converges to the identical state.
+* **Straggler mitigation** — per-step deadline derived from a running median;
+  a step exceeding ``straggler_factor`` x median is recorded and the
+  mitigation hook fires (on a real fleet: re-dispatch to a backup host /
+  drop the slow host from the next allreduce ring).
+* **Elastic re-mesh** — ``reshard_for`` device_puts a restored state against
+  a new mesh (fewer/more hosts) so training continues after membership
+  changes.
+* **Grad compression** — optional int8 error-feedback DP all-reduce
+  (repro.optim.compression) for the cross-pod axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    min_history: int = 8
+
+
+class Trainer:
+    def __init__(self, step_fn: Callable, init_state, data_stream_fn: Callable[[int], Iterator],
+                 cfg: TrainerConfig, *,
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 straggler_hook: Optional[Callable[[int, float], None]] = None):
+        """step_fn(state, batch) -> (state, metrics). data_stream_fn(start_step)
+        must be deterministic in step (resume-safe)."""
+        self.step_fn = step_fn
+        self.state = init_state
+        self.cfg = cfg
+        self.data_stream_fn = data_stream_fn
+        self.failure_hook = failure_hook
+        self.straggler_hook = straggler_hook
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        self.step_times = []
+        self.stragglers = []
+        self.metrics_log = []
+
+    # -- fault tolerance -------------------------------------------------------
+
+    def try_restore(self) -> int:
+        restored, step = self.ckpt.restore(self.state)
+        if restored is not None:
+            self.state = restored
+            return int(step)
+        return 0
+
+    def reshard_for(self, mesh, state_shardings):
+        """Elastic restart: move state onto a new mesh layout."""
+        self.state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), self.state, state_shardings)
+        return self.state
+
+    # -- loop -------------------------------------------------------------------
+
+    def run(self, *, resume: bool = True) -> dict:
+        start = self.try_restore() if resume else 0
+        stream = self.data_stream_fn(start)
+        step = start
+        for step in range(start, self.cfg.total_steps):
+            batch = next(stream)
+            if self.failure_hook is not None:
+                self.failure_hook(step)  # may raise to simulate a node loss
+            t0 = time.perf_counter()
+            batch = jax.tree.map(jnp.asarray, batch)
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._track_step(step, dt)
+            self.metrics_log.append({"step": step, **{k: float(v) for k, v in metrics.items()}})
+            if (step + 1) % self.cfg.ckpt_every == 0:
+                self.ckpt.save(self.state, step + 1)
+        if (step + 1) % self.cfg.ckpt_every:
+            self.ckpt.save(self.state, step + 1)
+        return {"final_step": step + 1, "stragglers": self.stragglers,
+                "metrics": self.metrics_log}
+
+    def _track_step(self, step: int, dt: float):
+        hist = self.step_times
+        if len(hist) >= self.cfg.min_history:
+            med = statistics.median(hist[-64:])
+            if dt > self.cfg.straggler_factor * med:
+                self.stragglers.append((step, dt, med))
+                if self.straggler_hook is not None:
+                    self.straggler_hook(step, dt / med)
+        hist.append(dt)

@@ -1,0 +1,9 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own flags in
+# a separate process). Keep JAX quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,120 @@
+"""Row-cache tests: JAX functional cache semantics + hypothesis invariants
+(JaxRowCache vs the exact host simulator as oracle)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cache import (CacheGeometry, JaxRowCache, dual_cache_geometry,
+                              set_index)
+from repro.core.cache_sim import SetAssocSimCache, SimRowCache
+
+
+@pytest.fixture
+def cache():
+    return JaxRowCache(CacheGeometry(num_sets=8, ways=4, dim=8))
+
+
+def test_miss_then_hit(cache):
+    st_ = cache.init()
+    t = jnp.array([1, 1], jnp.int32)
+    r = jnp.array([10, 11], jnp.int32)
+    vals, hit, st_ = cache.lookup(st_, t, r)
+    assert not bool(hit.any())
+    data = jnp.arange(16, dtype=jnp.float32).reshape(2, 8)
+    st_ = cache.insert(st_, t, r, data)
+    vals, hit, st_ = cache.lookup(st_, t, r)
+    assert bool(hit.all())
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(data))
+
+
+def test_miss_returns_zeros(cache):
+    st_ = cache.init()
+    vals, hit, _ = cache.lookup(st_, jnp.array([5], jnp.int32), jnp.array([99], jnp.int32))
+    assert not bool(hit[0])
+    assert float(jnp.abs(vals).sum()) == 0.0
+
+
+def test_lru_eviction_within_set():
+    geo = CacheGeometry(num_sets=1, ways=2, dim=4)
+    c = JaxRowCache(geo)
+    st_ = c.init()
+    keys = [(0, 1), (0, 2), (0, 3)]  # 3 rows into 2 ways, same set
+    for t, r in keys:
+        st_ = c.insert(st_, jnp.array([t], jnp.int32), jnp.array([r], jnp.int32),
+                       jnp.full((1, 4), float(r)))
+    # (0,1) was LRU -> evicted; (0,2) and (0,3) remain
+    _, hit1, st_ = c.lookup(st_, jnp.array([0], jnp.int32), jnp.array([1], jnp.int32))
+    _, hit3, st_ = c.lookup(st_, jnp.array([0], jnp.int32), jnp.array([3], jnp.int32))
+    assert not bool(hit1[0])
+    assert bool(hit3[0])
+
+
+def test_update_in_place_no_duplicate():
+    geo = CacheGeometry(num_sets=4, ways=2, dim=2)
+    c = JaxRowCache(geo)
+    st_ = c.init()
+    t = jnp.array([0], jnp.int32)
+    r = jnp.array([7], jnp.int32)
+    st_ = c.insert(st_, t, r, jnp.ones((1, 2)))
+    st_ = c.insert(st_, t, r, 2 * jnp.ones((1, 2)))
+    tags = np.asarray(st_["tag_row"])
+    assert (tags == 7).sum() == 1  # updated, not duplicated
+    vals, hit, _ = c.lookup(st_, t, r)
+    assert float(vals[0, 0]) == 2.0
+
+
+def test_dual_cache_geometry_metadata_split():
+    small = dual_cache_geometry(1 << 20, dim=16, row_payload_bytes=100)
+    big = dual_cache_geometry(1 << 20, dim=128, row_payload_bytes=600)
+    # same budget, bigger rows + bigger metadata -> fewer rows
+    assert small.capacity_rows > big.capacity_rows
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 200)),
+                min_size=1, max_size=120))
+@settings(max_examples=40, deadline=None)
+def test_jax_cache_matches_host_oracle(accesses):
+    """Property: per-access hit/miss of JaxRowCache (single-key batches) is
+    identical to the vectorized host set-assoc simulator."""
+    geo = CacheGeometry(num_sets=4, ways=2, dim=2)
+    c = JaxRowCache(geo)
+    st_j = c.init()
+    sim = SetAssocSimCache(num_sets=4, ways=2)
+
+    for t, r in accesses:
+        tt = jnp.array([t], jnp.int32)
+        rr = jnp.array([r], jnp.int32)
+        _, hit, st_j = c.lookup(st_j, tt, rr)
+        if not bool(hit[0]):
+            st_j = c.insert(st_j, tt, rr, jnp.zeros((1, 2)))
+        # host sim: key must map to same set -> use same hash
+        sets = int(np.asarray(set_index(tt, rr, 4))[0])
+        keys = sim._key(t, np.array([r]))
+        # emulate one access with identical set index
+        line = sim.tags[sets]
+        sim.clock += 1
+        w = np.nonzero(line == keys[0])[0]
+        hit_sim = bool(w.size)
+        if hit_sim:
+            sim.stamp[sets, w[0]] = sim.clock
+        else:
+            victim = int(np.argmin(sim.stamp[sets]))
+            sim.tags[sets, victim] = keys[0]
+            sim.stamp[sets, victim] = sim.clock
+        assert bool(hit[0]) == hit_sim, (t, r, accesses)
+
+
+@given(st.integers(1, 1 << 20), st.integers(2, 64))
+@settings(max_examples=50, deadline=None)
+def test_set_index_in_range(row, num_sets):
+    s = set_index(jnp.array([3], jnp.int32), jnp.array([row], jnp.int32), num_sets)
+    assert 0 <= int(s[0]) < num_sets
+
+
+def test_sim_cache_byte_budget_enforced():
+    c = SimRowCache(1000)
+    for r in range(100):
+        c.access(0, r, 90)  # ~98 B cost each
+    assert c.used <= 1000

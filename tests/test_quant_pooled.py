@@ -1,0 +1,84 @@
+"""Quantization round-trips + pooled-embedding cache semantics (+hypothesis)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pooled_cache import PooledEmbeddingCache, order_invariant_hash
+from repro.core.quant import dequantize_rows, quantize_rows, row_bytes
+
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    t = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    q = quantize_rows(t, bits=8)
+    deq = dequantize_rows(q)
+    span = np.asarray(t.max(axis=1) - t.min(axis=1))
+    err = np.abs(np.asarray(deq - t))
+    assert (err <= span[:, None] / 255 * 0.51 + 1e-6).all()
+
+
+def test_int4_roundtrip_error_bounded():
+    rng = np.random.default_rng(1)
+    t = jnp.asarray(rng.standard_normal((32, 17)), jnp.float32)  # odd dim
+    q = quantize_rows(t, bits=4)
+    deq = dequantize_rows(q)
+    assert deq.shape == t.shape
+    span = np.asarray(t.max(axis=1) - t.min(axis=1))
+    err = np.abs(np.asarray(deq - t))
+    assert (err <= span[:, None] / 15 * 0.51 + 1e-6).all()
+
+
+def test_gathered_dequant_matches_full():
+    rng = np.random.default_rng(2)
+    t = jnp.asarray(rng.standard_normal((50, 8)), jnp.float32)
+    q = quantize_rows(t, bits=8)
+    idx = jnp.asarray([3, 7, 3, 49], jnp.int32)
+    np.testing.assert_allclose(np.asarray(dequantize_rows(q, idx)),
+                               np.asarray(dequantize_rows(q))[np.asarray(idx)])
+
+
+def test_row_bytes():
+    assert row_bytes(64, 8) == 72       # paper A.5's example
+    assert row_bytes(64, 4) == 40
+    assert row_bytes(65, 4) == 41
+
+
+@given(st.lists(st.integers(0, 1 << 30), min_size=1, max_size=64))
+@settings(max_examples=60, deadline=None)
+def test_hash_order_invariance(indices):
+    a = np.array(indices, np.int64)
+    rng = np.random.default_rng(0)
+    b = rng.permutation(a)
+    assert order_invariant_hash(3, a) == order_invariant_hash(3, b)
+
+
+def test_hash_multiset_sensitivity():
+    # + combiner (unlike xor) distinguishes duplicated indices
+    a = np.array([5, 5, 9], np.int64)
+    b = np.array([5, 9], np.int64)
+    c = np.array([5, 9, 9], np.int64)
+    assert order_invariant_hash(0, a) != order_invariant_hash(0, b)
+    assert order_invariant_hash(0, a) != order_invariant_hash(0, c)
+
+
+def test_hash_table_sensitivity():
+    a = np.array([1, 2, 3], np.int64)
+    assert order_invariant_hash(0, a) != order_invariant_hash(1, a)
+
+
+def test_pooled_cache_len_threshold_and_lru():
+    c = PooledEmbeddingCache(capacity_bytes=3000, len_threshold=4)
+    short = np.array([1, 2], np.int64)
+    assert c.lookup(0, short) is None
+    assert c.skipped == 1
+    long_a = np.array([1, 2, 3, 4, 5], np.int64)
+    vec = np.ones(64, np.float32)
+    c.insert(0, long_a, vec)
+    np.testing.assert_allclose(c.lookup(0, long_a), vec)
+    # permuted sequence hits too (order-invariant)
+    np.testing.assert_allclose(c.lookup(0, long_a[::-1]), vec)
+    # fill beyond capacity -> LRU eviction keeps bytes bounded
+    for i in range(50):
+        c.insert(0, long_a + i * 10, vec)
+    assert c.used <= 3000

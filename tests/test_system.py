@@ -1,0 +1,82 @@
+"""End-to-end behaviour tests for the SDM system (the paper's data plane)."""
+import numpy as np
+import pytest
+
+from repro.core import (DEVICES, PlacementConfig, SDMConfig, SDMEmbeddingStore,
+                        sample_table_metas)
+from repro.core import placement as plc
+from repro.core.locality import TableMeta
+from repro.runtime.serve_sched import ServeConfig, ServeScheduler
+
+
+@pytest.fixture
+def store():
+    rng = np.random.default_rng(0)
+    metas = sample_table_metas(
+        rng, num_user=12, num_item=6, user_dim_bytes=(90, 172),
+        item_dim_bytes=(90, 172), user_pool=16, item_pool=8,
+        total_bytes=2e9)
+    return SDMEmbeddingStore(
+        metas, DEVICES["nand_flash"],
+        SDMConfig(fm_cache_bytes=64 << 20, pooled_cache_bytes=8 << 20,
+                  pooled_len_threshold=4),
+        seed=1, materialize_dim=16)
+
+
+def test_serve_query_accounts_latency_and_io(store):
+    q = store.synth_query()
+    stats = store.serve_query(q)
+    assert stats.latency_us >= store.cfg.item_time_us
+    assert stats.sm_ios > 0  # cold cache: misses hit SM
+
+
+def test_cache_warms_up(store):
+    for _ in range(60):
+        store.serve_query(store.synth_query())
+    assert store.row_hit_rate > 0.5, store.row_hit_rate
+
+
+def test_pooled_cache_hits_on_repeat(store):
+    q = store.synth_query()
+    store.serve_query(q)
+    before = store.stats.pooled_hits
+    store.serve_query(q)  # identical index sequences -> pooled hits
+    assert store.stats.pooled_hits > before
+
+
+def test_item_tables_placed_on_fm(store):
+    for m in store.metas.values():
+        if m.kind == "item":
+            assert store.placement[m.table_id] == plc.FM_DIRECT
+
+
+def test_placement_respects_fm_budget():
+    rng = np.random.default_rng(2)
+    metas = sample_table_metas(
+        rng, num_user=20, num_item=0, user_dim_bytes=(64, 128),
+        item_dim_bytes=(64, 128), user_pool=8, item_pool=8, total_bytes=1e9)
+    budget = int(0.3e9)
+    pl = plc.assign(list(metas), PlacementConfig(
+        policy="fixed_fm_sm_cache", fm_budget_bytes=budget))
+    assert plc.fm_bytes_used(metas, pl) <= budget
+    assert any(v == plc.FM_DIRECT for v in pl.values())
+    assert any(v == plc.SM_CACHED for v in pl.values())
+
+
+def test_per_table_cache_bypass():
+    metas = [TableMeta(0, 1000, 64, 4, 1.01, "user"),
+             TableMeta(1, 1000, 64, 4, 1.4, "user")]
+    pl = plc.assign(metas, PlacementConfig(policy="per_table_cache",
+                                           item_tables_on_fm=False))
+    assert pl[0] == plc.SM_UNCACHED  # low locality -> bypass
+    assert pl[1] == plc.SM_CACHED
+
+
+def test_interop_scheduler_reduces_latency(store):
+    par = ServeScheduler(store, ServeConfig(inter_op_parallel=True))
+    ser = ServeScheduler(store, ServeConfig(inter_op_parallel=False))
+    for _ in range(40):
+        q = store.synth_query()
+        par.serve(q)
+        ser.serve(q)
+    assert par.percentile(95) <= ser.percentile(95)

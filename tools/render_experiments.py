@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md tables from artifacts/{dryrun,roofline}/*.json.
+
+Replaces the content between <!--DRYRUN--> / <!--/DRYRUN--> and
+<!--ROOFLINE--> / <!--/ROOFLINE--> markers.
+"""
+import glob
+import json
+import re
+from pathlib import Path
+
+from repro.configs import ASSIGNED_ARCHS, SHAPE_ORDER
+
+
+def _gb(x):
+    return f"{x/2**30:.2f}"
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | compile | mem/dev (meas / tpu-est) | fits | HLO GF/dev | wire GB/dev |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPE_ORDER:
+            for mesh in ("single", "multi"):
+                f = f"artifacts/dryrun/{arch}__{shape}__{mesh}.json"
+                try:
+                    d = json.load(open(f))
+                except FileNotFoundError:
+                    continue
+                if d["status"] == "skipped":
+                    rows.append(f"| {arch} | {shape} | {mesh} | — | — | — | skip: {d['reason'][:42]} | |")
+                    continue
+                if d["status"] != "ok":
+                    rows.append(f"| {arch} | {shape} | {mesh} | FAILED | | | | |")
+                    continue
+                m = d["memory"]
+                rows.append(
+                    f"| {arch} | {shape} | {mesh} | {d['compile_s']:.0f}s "
+                    f"| {_gb(m['peak_per_device'])} / {_gb(m['peak_analytic'])} GiB "
+                    f"| {'Y' if m['fits_analytic'] else 'N'} "
+                    f"| {d['hlo_flops_per_device']/1e9:.0f} "
+                    f"| {d['collectives']['total_wire_bytes']/1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = ["| arch | shape | compute s | memory s | collective s | bottleneck | roofline frac | useful FLOPs |",
+            "|---|---|---|---|---|---|---|---|"]
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPE_ORDER:
+            f = f"artifacts/roofline/{arch}__{shape}.json"
+            try:
+                d = json.load(open(f))
+            except FileNotFoundError:
+                continue
+            if d.get("status") != "ok":
+                rows.append(f"| {arch} | {shape} | — | — | — | skip | — | — |")
+                continue
+            r = d["roofline"]
+            rows.append(
+                f"| {arch} | {shape} | {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+                f"| {r['roofline_fraction']:.3f} | {d['useful_flops_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    p = Path("EXPERIMENTS.md")
+    s = p.read_text()
+    s = re.sub(r"(<!--DRYRUN-->).*?(<!--/DRYRUN-->)",
+               lambda m: m.group(1) + "\n" + dryrun_table() + "\n" + m.group(2),
+               s, flags=re.S)
+    s = re.sub(r"(<!--ROOFLINE-->).*?(<!--/ROOFLINE-->)",
+               lambda m: m.group(1) + "\n" + roofline_table() + "\n" + m.group(2),
+               s, flags=re.S)
+    p.write_text(s)
+    print("EXPERIMENTS.md tables rendered")
+
+
+if __name__ == "__main__":
+    main()
