@@ -1,0 +1,16 @@
+PYTHONPATH := src:.
+PY := PYTHONPATH=$(PYTHONPATH) python
+
+.PHONY: test bench-smoke docs-check check
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-smoke:
+	$(PY) benchmarks/run.py --only serve_batched
+	$(PY) benchmarks/run.py --only fig3_io
+
+docs-check:
+	$(PY) tools/docs_check.py
+
+check: docs-check test

@@ -18,10 +18,11 @@ def main() -> None:
 
     from benchmarks import (depruning, fig1_skew, fig3_io, fig45_locality,
                             fig6_cache_org, interop_warmup, kernels,
-                            table8_power, table9_scaleout,
+                            serve_batched, table8_power, table9_scaleout,
                             table11_multitenancy, table34_pooled)
 
     suites = [
+        ("serve_batched", serve_batched.run),
         ("fig1_skew", fig1_skew.run),
         ("fig3_io", fig3_io.run),
         ("fig45_locality", fig45_locality.run),

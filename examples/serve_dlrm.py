@@ -1,9 +1,19 @@
-"""Serve a trained DLRM with SDM tiering: user embeddings on SM (Nand model)
-behind the FM row cache + pooled cache, item embeddings + MLPs on FM, batched
-item ranking per query (Eq. 2: B_U=1, B_I large), inter-op-parallel IO, and a
-power/QPS report per the paper's Table 8 methodology.
+"""Serve a trained DLRM with SDM tiering, batched end to end: user embeddings
+on SM (Nand model) behind the FM row cache + pooled cache, item embeddings +
+MLPs on FM, batched item ranking per query (Eq. 2: B_U=1, B_I large),
+inter-op-parallel IO with the event-driven admission ledger, and a power/QPS
+report per the paper's Table 8 methodology.
 
-Run: PYTHONPATH=src python examples/serve_dlrm.py [--queries 400]
+Queries flow through two data planes and both are exercised here:
+
+* host plane   — ``ServeScheduler.serve_batch`` over ``SDMEmbeddingStore``:
+                 vectorized probe/IO accounting for the big virtual tables.
+* device plane — ``DeviceServingEngine``: the model's real user tables,
+                 int8-quantized in the simulated SM tier, served through the
+                 ``cache_probe`` + ``gather_pool`` Pallas kernels with an HBM
+                 row cache (numerics checked against the numpy oracle).
+
+Run: PYTHONPATH=src python examples/serve_dlrm.py [--queries 128 --batch 32]
 """
 import argparse
 
@@ -14,12 +24,14 @@ import numpy as np
 from repro.core import DEVICES, SDMConfig, SDMEmbeddingStore, sample_table_metas
 from repro.core.power import HW_L, HW_SS, Workload, run_scenario
 from repro.models import dlrm
+from repro.runtime.engine import DeviceServingEngine, EngineConfig
 from repro.runtime.serve_sched import ServeConfig, ServeScheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--queries", type=int, default=400)
+    ap.add_argument("--queries", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=32, help="serving batch size")
     ap.add_argument("--item-batch", type=int, default=50)
     args = ap.parse_args()
 
@@ -39,25 +51,43 @@ def main():
     sched = ServeScheduler(store, ServeConfig(inter_op_parallel=True,
                                               item_compute_us=200.0))
 
+    # device plane: the DLRM's user tables behind the HBM row cache
+    n_user = len(arch.user_tables)
+    engine = DeviceServingEngine(
+        {i: np.asarray(params["tables"][i]) for i in range(n_user)},
+        DEVICES["nand_flash"], EngineConfig(hbm_cache_bytes=4 << 20))
+
     serve = jax.jit(lambda p, u, it, d: dlrm.serve_query(p, u, it, d, arch))
     Bi = args.item_batch
     scores_sum = 0.0
-    for i in range(args.queries):
-        # SDM side: user-table IO accounting
-        r = sched.serve(store.synth_query(), bg_iops=10_000)
-        # compute side: actual CTR scores for the item batch
-        u_idx = jnp.asarray(rng.integers(0, 50_000, (6, arch.pooling)), jnp.int32)
+    max_dev_err = 0.0
+    done = 0
+    while done < args.queries:
+        nb = min(args.batch, args.queries - done)
+        # SDM host plane: one batched pass for nb queries' user-table IO
+        sched.serve_batch([store.synth_query() for _ in range(nb)],
+                          bg_iops=10_000)
+        # device plane: pooled user embeddings for the same nb queries
+        u_idx = rng.integers(0, 50_000, (nb, n_user, arch.pooling))
+        pooled, _ = engine.serve_batch(u_idx, bg_iops=10_000)
+        max_dev_err = max(max_dev_err,
+                          float(np.abs(pooled - engine.reference_pool(u_idx)).max()))
+        # compute side: actual CTR scores for the item batch of one query
         it_idx = jnp.asarray(rng.integers(0, 50_000, (3, Bi, arch.pooling)), jnp.int32)
         dense = jnp.asarray(rng.standard_normal((Bi, arch.num_dense)), jnp.float32)
-        scores = serve(params["tables"] and params, u_idx, it_idx, dense)
+        scores = serve(params, jnp.asarray(u_idx[0], jnp.int32), it_idx, dense)
         scores_sum += float(scores.mean())
+        done += nb
 
-    print(f"served {args.queries} queries x {Bi} items")
+    print(f"served {args.queries} queries (batch={args.batch}) x {Bi} items")
     print(f"  p50/p95/p99 latency: {sched.percentile(50):6.0f} / "
           f"{sched.percentile(95):6.0f} / {sched.percentile(99):6.0f} us")
     print(f"  row-cache hit rate:  {store.row_hit_rate:.3f}")
     print(f"  pooled hit rate:     {store.pooled_hit_rate:.3f}")
+    print(f"  inflight IOs (now):  {sched.inflight}  deferred: {sched.deferred}")
     print(f"  feasible QPS (p95):  {sched.qps_at_latency():.0f}")
+    print(f"  device engine:       hit rate {engine.hit_rate:.3f}, "
+          f"max |pooled - ref| = {max_dev_err:.2e}")
 
     # warehouse-scale power statement (Table 8 methodology)
     w = Workload("m1", sm_tables=50, avg_pool=42, row_bytes=59,

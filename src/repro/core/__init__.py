@@ -1,9 +1,11 @@
 """SDM core — the paper's contribution: tiered software-defined memory for
 embedding-dominated inference (scheduling, caches, IO, placement, power)."""
 from repro.core.cache import CacheGeometry, JaxRowCache, dual_cache_geometry, make_key  # noqa: F401
+from repro.core.cache_sim import BatchedRowCache, SetAssocSimCache, SimRowCache  # noqa: F401
 from repro.core.io_sim import DEVICES, DeviceModel, IOEngine, IOQueueConfig, required_iops  # noqa: F401
 from repro.core.locality import TableMeta, sample_table_metas, zipf_indices  # noqa: F401
 from repro.core.placement import FM_DIRECT, SM_CACHED, SM_UNCACHED, PlacementConfig, assign  # noqa: F401
-from repro.core.pooled_cache import PooledEmbeddingCache, order_invariant_hash  # noqa: F401
+from repro.core.pooled_cache import (PooledEmbeddingCache, order_invariant_hash,  # noqa: F401
+                                     order_invariant_hash_batch)
 from repro.core.quant import dequantize_rows, quantize_rows, row_bytes  # noqa: F401
-from repro.core.sdm import SDMConfig, SDMEmbeddingStore  # noqa: F401
+from repro.core.sdm import QueryStats, SDMConfig, SDMEmbeddingStore  # noqa: F401

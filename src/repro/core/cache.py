@@ -93,6 +93,34 @@ class JaxRowCache:
                          misses=state["misses"] + jnp.sum(~hit, dtype=jnp.int32))
         return values, hit, new_state
 
+    def lookup_device(self, state: dict, tables: jax.Array, rows: jax.Array,
+                      *, use_kernel: bool = True
+                      ) -> Tuple[jax.Array, jax.Array, dict]:
+        """Probe through the ``cache_probe`` Pallas kernel (§4.3 hot path).
+
+        The kernel performs the data movement — per query, one cache set's tag
+        lines and data block move through VMEM and the hit row is selected
+        with a one-hot matmul — while the LRU metadata update (stamps, clock,
+        hit counters) stays in plain XLA, matching :meth:`lookup` exactly.
+        """
+        from repro.kernels import ops
+        g = self.geo
+        sets = set_index(tables, rows, g.num_sets)
+        values, hit_i = ops.row_cache_probe(
+            state["tag_table"], state["tag_row"], state["data"],
+            tables, rows, sets, use_kernel=use_kernel)
+        hit = hit_i.astype(bool)
+        match = ((state["tag_table"][sets] == tables[:, None]) &
+                 (state["tag_row"][sets] == rows[:, None]))
+        way = jnp.argmax(match, axis=1)
+        clock = state["clock"] + 1
+        stamp = state["stamp"].at[sets, way].set(
+            jnp.where(hit, clock, state["stamp"][sets, way]))
+        new_state = dict(state, stamp=stamp, clock=clock,
+                         hits=state["hits"] + jnp.sum(hit, dtype=jnp.int32),
+                         misses=state["misses"] + jnp.sum(~hit, dtype=jnp.int32))
+        return values.astype(self.dtype), hit, new_state
+
     def insert(self, state: dict, tables: jax.Array, rows: jax.Array,
                values: jax.Array, mask=None) -> dict:
         """Insert rows (LRU way eviction). mask=False entries are skipped.

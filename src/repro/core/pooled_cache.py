@@ -13,21 +13,41 @@ from typing import Optional, Tuple
 import numpy as np
 
 
+def _splitmix(x: np.ndarray) -> np.ndarray:
+    x = x + np.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
 def order_invariant_hash(table_id: int, indices: np.ndarray) -> int:
     """Commutative 64-bit hash over the index multiset.
 
     Per-element SplitMix64 finalizer, combined with + (order-invariant, and
     multiset-sensitive unlike XOR, which would cancel duplicated indices).
     """
-    x = indices.astype(np.uint64)
-    x = x + np.uint64(0x9E3779B97F4A7C15)
-    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-    x = x ^ (x >> np.uint64(31))
+    x = _splitmix(indices.astype(np.uint64))
     h = np.uint64(np.sum(x, dtype=np.uint64))
     with np.errstate(over="ignore"):
         tmix = np.uint64(table_id) * np.uint64(0xD6E8FEB86659FD93)  # wraps (intended)
     return int(h ^ tmix)
+
+
+def order_invariant_hash_batch(table_id: int, cat_indices: np.ndarray,
+                               offsets: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`order_invariant_hash` over many requests at once.
+
+    ``cat_indices`` concatenates the requests' index arrays; ``offsets`` holds
+    each request's start position. Returns one uint64 key per request, equal
+    to the scalar hash of each segment (uint64 addition wraps identically).
+    Empty segments are not supported (reduceat would mis-sum them).
+    """
+    x = _splitmix(cat_indices.astype(np.uint64))
+    sums = np.add.reduceat(x, offsets.astype(np.intp)) if len(x) else \
+        np.zeros(len(offsets), np.uint64)
+    with np.errstate(over="ignore"):
+        tmix = np.uint64(table_id) * np.uint64(0xD6E8FEB86659FD93)
+    return sums ^ tmix
 
 
 class PooledEmbeddingCache:
@@ -48,20 +68,33 @@ class PooledEmbeddingCache:
         if len(indices) <= self.len_threshold:
             self.skipped += 1
             return None
-        key = order_invariant_hash(table_id, indices)
+        return self.lookup_hashed(order_invariant_hash(table_id, indices),
+                                  len(indices))
+
+    def lookup_hashed(self, key: int, length: int) -> Optional[np.ndarray]:
+        """Lookup with a precomputed key (batch path; same counting as
+        :meth:`lookup`, threshold already applied by the caller)."""
         entry = self.store.get(key)
         if entry is not None:
             self.store.move_to_end(key)
             self.hits += 1
-            self.hit_len_sum += len(indices)
+            self.hit_len_sum += length
             return entry[0]
         self.misses += 1
         return None
 
+    def note_pending_hit(self, length: int) -> None:
+        """Count a hit on an entry an earlier request of the same batch is
+        about to insert (the batch path probes before it fills)."""
+        self.hits += 1
+        self.hit_len_sum += length
+
     def insert(self, table_id: int, indices: np.ndarray, pooled: np.ndarray) -> None:
         if len(indices) <= self.len_threshold:
             return
-        key = order_invariant_hash(table_id, indices)
+        self.insert_hashed(order_invariant_hash(table_id, indices), pooled)
+
+    def insert_hashed(self, key: int, pooled: np.ndarray) -> None:
         cost = pooled.nbytes + 24  # key + sizes metadata
         while self.used + cost > self.capacity and self.store:
             _, (_, old) = self.store.popitem(last=False)

@@ -4,9 +4,22 @@ Ties together placement (§4.6), the unified FM row cache (§4.3), the pooled
 embedding cache (§4.4), de-pruning (§4.5), quantized row storage and the
 IO engine (§4.1). One query flows:
 
-    per table: pooled-cache probe -> row-cache lookups -> batched SM IO for
-    misses -> dequant+pool (Pallas gather_pool on device; numpy fallback on
-    host) -> pooled-cache fill -> output dense vectors for the interaction.
+    per table: pooled-cache probe -> row-cache probe (vectorized) -> one
+    batched SM IO for the unique misses -> row-cache fill -> dequant+pool
+    (Pallas gather_pool on device; numpy fallback on host) -> pooled-cache
+    fill -> output dense vectors for the interaction.
+
+The row cache is the set-associative :class:`~repro.core.cache_sim.
+BatchedRowCache`: a whole request is probed with one vectorized tag compare
+and its unique misses become a single batched IO — the host-side mirror of
+the device cache (`cache.JaxRowCache` + the `cache_probe` Pallas kernel).
+
+``serve_query`` handles one query; ``serve_batch`` coalesces a list of
+queries, probing each table once across the whole batch and submitting the
+per-query IO counts through one vectorized ``IOEngine.submit_batch`` call.
+Both paths produce bit-identical ``QueryStats`` (serve_batch falls back to
+exact per-request processing whenever a cache eviction — whose order is
+arrival-dependent — would occur mid-batch).
 
 Latency accounting mirrors Eq. 3/4: user-side SM time is overlapped with
 item-side FM compute and only the excess surfaces in query latency.
@@ -19,10 +32,11 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import placement as plc
-from repro.core.cache_sim import SimRowCache
+from repro.core.cache_sim import BatchedRowCache
 from repro.core.io_sim import DeviceModel, IOEngine, IOQueueConfig
 from repro.core.locality import TableMeta, zipf_indices
-from repro.core.pooled_cache import PooledEmbeddingCache
+from repro.core.pooled_cache import (PooledEmbeddingCache,
+                                     order_invariant_hash_batch)
 
 
 @dataclasses.dataclass
@@ -35,6 +49,7 @@ class SDMConfig:
     io_queue: IOQueueConfig = dataclasses.field(default_factory=IOQueueConfig)
     num_devices: int = 2
     item_time_us: float = 200.0          # item-side (FM/accelerator) per-query time
+    row_cache_ways: int = 8              # set-associativity of the FM row cache
 
 
 @dataclasses.dataclass
@@ -45,6 +60,7 @@ class QueryStats:
     row_lookups: int = 0
     pooled_hits: int = 0
     pooled_lookups: int = 0
+    sm_time_us: float = 0.0              # slowest SM IO batch (pre-overlap)
 
 
 class SDMEmbeddingStore:
@@ -55,13 +71,23 @@ class SDMEmbeddingStore:
         self.metas = {m.table_id: m for m in metas}
         self.cfg = cfg
         self.placement = plc.assign(list(metas), cfg.placement)
-        self.row_cache = SimRowCache(cfg.fm_cache_bytes)
+        # Geometry is sized for the largest row so the byte budget holds for
+        # every table sharing the unified cache.
+        row_b = max(m.dim_bytes for m in metas)
+        self.row_cache = BatchedRowCache(cfg.fm_cache_bytes, row_b,
+                                         ways=cfg.row_cache_ways)
         self.pooled_cache = (PooledEmbeddingCache(cfg.pooled_cache_bytes,
                                                   cfg.pooled_len_threshold)
                              if cfg.pooled_cache_bytes else None)
         self.io = IOEngine(device, cfg.num_devices, cfg.io_queue)
         self.rng = np.random.default_rng(seed)
         self.stats = QueryStats()
+        self.batch_fallbacks = 0   # serve_batch dropped to the exact slow path
+        self._key_events: Optional[np.ndarray] = None  # serve_batch scratch
+        self._pooled_touch: list = []
+        self._io_req: list = []
+        self._tpos: Dict = {}
+        self._ev_width = 1
         # Tiny materialized payloads for numeric paths (tests/examples);
         # production tables stay virtual (metadata-only) for the big models.
         self.payloads: Dict[int, np.ndarray] = {}
@@ -79,6 +105,7 @@ class SDMEmbeddingStore:
         m = self.metas[table_id]
         place = self.placement[table_id]
         st = self.stats
+        indices = np.asarray(indices)
 
         pooled_vec = None
         if self.pooled_cache is not None and place != plc.FM_DIRECT:
@@ -94,24 +121,19 @@ class SDMEmbeddingStore:
         if place == plc.FM_DIRECT:
             pass  # FM gather; counted on the item/FM side
         else:
-            misses = np.zeros(len(indices), bool)
             if place == plc.SM_CACHED:
-                for j, r in enumerate(indices):
-                    st.row_lookups += 1
-                    if self.row_cache.access(table_id, int(r), m.dim_bytes):
-                        st.row_hits += 1
-                    else:
-                        misses[j] = True
+                st.row_lookups += len(indices)
+                hit, ios = self.row_cache.access_batch(table_id, indices)
+                st.row_hits += int(hit.sum())
             else:  # SM_UNCACHED: every lookup is an IO
-                misses[:] = True
-            ios = int(misses.sum())
+                ios = len(indices)
             lat, _ = self.io.submit(ios, m.dim_bytes, bg_iops)
             st.sm_ios += ios
 
         vec = None
         if table_id in self.payloads:
             tbl = self.payloads[table_id]
-            vec = tbl[np.asarray(indices) % tbl.shape[0]].sum(axis=0)
+            vec = tbl[indices % tbl.shape[0]].sum(axis=0)
             if self.pooled_cache is not None and place != plc.FM_DIRECT:
                 self.pooled_cache.insert(table_id, indices, vec)
         elif self.pooled_cache is not None and place != plc.FM_DIRECT:
@@ -130,9 +152,248 @@ class SDMEmbeddingStore:
             r = self.lookup_pool(tid, idx, bg_iops)
             sm_lat = max(sm_lat, r["latency_us"])
             ios += r["ios"]
-        q = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat), sm_ios=ios)
+        q = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat), sm_ios=ios,
+                       sm_time_us=sm_lat)
         self.stats.latency_us += q.latency_us
         return q
+
+    # -- batched query path ---------------------------------------------------
+
+    def serve_batch(self, requests_list: Sequence[Dict[int, np.ndarray]],
+                    bg_iops: float = 0.0) -> List[QueryStats]:
+        """Serve a batch of queries, coalescing work across queries *and*
+        tables: every cached table's indices across the whole batch go
+        through one row-cache probe plan, per-query IO counts go through one
+        vectorized ``submit_batch`` per table, and pooled-cache keys are
+        hashed in one vectorized pass per table.
+
+        Stats totals are bit-identical to calling :meth:`serve_query` on each
+        request in order. Batches that could evict (row or pooled cache)
+        before all probes complete fall back to exactly that sequential path
+        — the pre-flight plan mutates nothing, so the fallback is exact (see
+        ``batch_fallbacks``).
+        """
+        nq = len(requests_list)
+        if nq == 0:
+            return []
+        seen = set()
+        table_order = [tid for req in requests_list for tid in req
+                       if not (tid in seen or seen.add(tid))]
+        per_table = {}           # tid -> (qids, all_idx, lens)
+        for tid in table_order:
+            qids = [q for q, req in enumerate(requests_list) if tid in req]
+            all_idx = [np.asarray(requests_list[q][tid]) for q in qids]
+            lens = np.array([len(i) for i in all_idx], np.int64)
+            per_table[tid] = (qids, all_idx, lens)
+        if not self._pooled_headroom(per_table):
+            self.batch_fallbacks += 1
+            return [self.serve_query(r, bg_iops) for r in requests_list]
+
+        # Pre-flight row-cache plan over every cached table's keys (a
+        # superset of what the row phase will touch: pooled hits drop out
+        # later, which only makes the eviction guard conservative).
+        spans = {}
+        key_parts = []
+        ofs = 0
+        for tid in table_order:
+            if self.placement[tid] != plc.SM_CACHED:
+                continue
+            _, all_idx, lens = per_table[tid]
+            n = int(lens.sum())
+            if n:
+                key_parts.append(self.row_cache.make_keys(
+                    tid, np.concatenate(all_idx)))
+            spans[tid] = (ofs, ofs + n)
+            ofs += n
+        plan = None
+        if ofs:
+            plan = self.row_cache.batch_plan(np.concatenate(key_parts))
+            if plan is None:     # an eviction would occur; nothing mutated yet
+                self.batch_fallbacks += 1
+                return [self.serve_query(r, bg_iops) for r in requests_list]
+            self._key_events = np.full(len(plan["uniq"]), -1, np.int64)
+
+        # sequential-arrival event ranking: (query, table position within the
+        # query, probe-vs-fill). Row-cache stamps and the pooled-cache LRU
+        # order are replayed in this order after the batch, so the state left
+        # behind is exactly what a sequential run would leave.
+        self._tpos = {(q, tid): p for q, req in enumerate(requests_list)
+                      for p, tid in enumerate(req)}
+        self._ev_width = 1 + max(len(req) for req in requests_list)
+        self._pooled_touch = []
+        self._io_req = []
+
+        sm_lat = np.zeros(nq, np.float64)
+        ios_q = np.zeros(nq, np.int64)
+        for tid in table_order:
+            self._serve_table_batch(tid, per_table[tid], plan,
+                                    spans.get(tid), sm_lat, ios_q)
+        if self._io_req:
+            cat_aq = np.concatenate([r[0] for r in self._io_req])
+            cat_ios = np.concatenate([r[1] for r in self._io_req])
+            cat_rb = np.concatenate([np.full(len(r[1]), r[2], np.int64)
+                                     for r in self._io_req])
+            lats, _ = self.io.submit_batch_multi(cat_ios, cat_rb, bg_iops)
+            np.maximum.at(sm_lat, cat_aq, lats)
+        self._io_req = []
+        if plan is not None:
+            used = np.nonzero(self._key_events >= 0)[0]
+            self.row_cache.commit(plan, used, self._key_events[used])
+            self._key_events = None
+        if self.pooled_cache is not None and self._pooled_touch:
+            store = self.pooled_cache.store
+            for _, _, k in sorted(self._pooled_touch):
+                if k in store:
+                    store.move_to_end(k)
+        self._pooled_touch = []
+
+        out = []
+        for q in range(nq):
+            qs = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat[q]),
+                            sm_ios=int(ios_q[q]), sm_time_us=float(sm_lat[q]))
+            self.stats.latency_us += qs.latency_us
+            out.append(qs)
+        return out
+
+    def _pooled_headroom(self, per_table) -> bool:
+        """True when the pooled cache cannot evict during this batch (so the
+        per-table processing order is exactly equivalent to arrival order)."""
+        if self.pooled_cache is None:
+            return True
+        thr = self.pooled_cache.len_threshold
+        worst = 0
+        for tid, (_, _, lens) in per_table.items():
+            if self.placement[tid] == plc.FM_DIRECT:
+                continue
+            dim = (self.payloads[tid].shape[1] if tid in self.payloads else 1)
+            worst += int((lens > thr).sum()) * (dim * 4 + 24)
+        return self.pooled_cache.used + worst <= self.pooled_cache.capacity
+
+    def _serve_table_batch(self, tid: int, table_data, plan, span,
+                           sm_lat: np.ndarray, ios_q: np.ndarray) -> None:
+        qids, all_idx, all_lens = table_data
+        m = self.metas[tid]
+        place = self.placement[tid]
+        st = self.stats
+        if place == plc.FM_DIRECT:
+            return  # FM gather; no SM IO, no pooled participation
+
+        # pooled-cache probe, in arrival order (hashes vectorized across the
+        # batch; a request whose key an earlier batch request will fill is a
+        # "pending hit", exactly as it would hit sequentially)
+        active: List[int] = []          # query id per active request
+        a_pos: List[int] = []           # position among this table's requests
+        idxs: List[np.ndarray] = []
+        keys: List[Optional[int]] = []
+        if self.pooled_cache is not None:
+            pc = self.pooled_cache
+            offs = np.zeros(len(qids), np.int64)
+            np.cumsum(all_lens[:-1], out=offs[1:])
+            np.minimum(offs, max(int(all_lens.sum()) - 1, 0), out=offs)
+            hashes = order_invariant_hash_batch(
+                tid, np.concatenate(all_idx) if len(all_idx) else
+                np.zeros(0, np.int64), offs)
+            pending = set()
+            hlist = hashes.tolist()        # python ints: cheap loop below
+            llist = all_lens.tolist()
+            thr = pc.len_threshold
+            for i, q in enumerate(qids):
+                st.pooled_lookups += 1
+                if llist[i] <= thr:
+                    pc.skipped += 1
+                    active.append(q)
+                    a_pos.append(i)
+                    idxs.append(all_idx[i])
+                    keys.append(None)      # below threshold: no pooled fill
+                    continue
+                k = hlist[i]
+                if k in pending:               # a pending key is never in store
+                    pc.note_pending_hit(llist[i])
+                    st.pooled_hits += 1
+                    self._pooled_touch.append((q, self._tpos[(q, tid)], k))
+                elif pc.lookup_hashed(k, llist[i]) is not None:
+                    st.pooled_hits += 1
+                    self._pooled_touch.append((q, self._tpos[(q, tid)], k))
+                else:
+                    pending.add(k)
+                    active.append(q)
+                    a_pos.append(i)
+                    idxs.append(all_idx[i])
+                    keys.append(k)
+                    self._pooled_touch.append((q, self._tpos[(q, tid)], k))
+        else:
+            active = list(qids)
+            a_pos = list(range(len(qids)))
+            idxs = all_idx
+        if not active:
+            return
+
+        na = len(active)
+        lens = all_lens[a_pos]
+        if place == plc.SM_CACHED and int(lens.sum()) == 0:
+            ios = np.zeros(na, np.int64)   # all-empty requests: no row work
+        elif place == plc.SM_CACHED:
+            # slice this table's elements out of the global plan, drop the
+            # pooled-hit requests, and attribute hits/IOs per request: a key
+            # is an SM IO only for the first request that misses it; every
+            # later request hits the just-filled line.
+            inv_sub = plan["inv"][span[0]:span[1]]
+            if na != len(qids):
+                active_mask = np.zeros(len(qids), bool)
+                active_mask[a_pos] = True
+                inv_sub = inv_sub[np.repeat(active_mask, all_lens)]
+            labels = np.repeat(np.arange(na, dtype=np.int64), lens)
+            ids, first_pos = np.unique(inv_sub, return_index=True)
+            first_lab = labels[first_pos]   # labels are nondecreasing
+            present = plan["present"]
+            loc = np.searchsorted(ids, inv_sub)
+            elem_hit = present[inv_sub] | (labels > first_lab[loc])
+            nh = int(elem_hit.sum())
+            st.row_lookups += len(inv_sub)
+            st.row_hits += nh
+            self.row_cache.hits += nh
+            self.row_cache.misses += len(inv_sub) - nh
+            miss = ~present[ids]
+            ios = np.bincount(first_lab[miss], minlength=na)
+            # each key's last touch, ranked in sequential arrival order: a
+            # line missed once is stamped at its filling request's fill tick,
+            # anything re-hit at its last prober's probe tick
+            last_lab = np.zeros(len(ids), np.int64)
+            last_lab[loc] = labels      # duplicate indices: last write wins,
+            #                             and labels are nondecreasing -> max
+            fill_last = miss & (last_lab == first_lab)
+            aq = np.asarray(active)
+            tpos = np.array([self._tpos[(q, tid)] for q in active], np.int64)
+            self._key_events[ids] = ((aq[last_lab] * self._ev_width
+                                      + tpos[last_lab]) * 2 + fill_last)
+        else:  # SM_UNCACHED: every lookup is an IO
+            ios = lens
+        st.sm_ios += int(ios.sum())
+
+        # IO is coalesced across tables too: one submit_batch_multi covers
+        # the whole batch after the table loop (latency is per-request,
+        # independent of submission grouping)
+        aq = np.asarray(active)          # unique -> plain fancy indexing works
+        self._io_req.append((aq, ios, m.dim_bytes))
+        ios_q[aq] += ios
+
+        # pooled-cache fill (+ pooled vectors when payloads are materialized)
+        if tid in self.payloads:
+            tbl = self.payloads[tid]
+            cat = np.concatenate(idxs)
+            offs = np.zeros(na, np.int64)
+            np.cumsum(lens[:-1], out=offs[1:])
+            np.minimum(offs, max(cat.size - 1, 0), out=offs)
+            vecs = (np.add.reduceat(tbl[cat % tbl.shape[0]], offs, axis=0)
+                    if cat.size else np.zeros((na, tbl.shape[1]), np.float32))
+            if self.pooled_cache is not None:
+                for i, k in enumerate(keys):
+                    if k is not None:
+                        self.pooled_cache.insert_hashed(k, vecs[i])
+        elif self.pooled_cache is not None:
+            for k in keys:
+                if k is not None:
+                    self.pooled_cache.insert_hashed(k, np.zeros(1, np.float32))
 
     # -- trace helpers --------------------------------------------------------
 

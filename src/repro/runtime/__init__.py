@@ -1,2 +1,3 @@
 from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401
 from repro.runtime.serve_sched import ServeScheduler, ServeConfig  # noqa: F401
+from repro.runtime.engine import DeviceServingEngine, EngineConfig  # noqa: F401

@@ -1,0 +1,165 @@
+"""Device-resident batched serving engine (HBM row cache + Pallas kernels).
+
+The device analogue of ``SDMEmbeddingStore.serve_batch``: embedding tables
+live quantized in a (simulated) SM tier, hot dequantized rows live in an HBM
+row cache (``JaxRowCache``), and one jitted step serves a whole
+``[batch, tables, pooling]`` index block:
+
+    probe   — ``cache_probe`` Pallas kernel: per query key, the cache set's
+              tag lines + data block move through VMEM, hit rows selected
+              with a one-hot matmul (§4.3).
+    gather  — misses are routed to the ``gather_pool`` Pallas kernel, which
+              fuses gather + rowwise dequant + pooling over the quantized
+              backing store (§4.4); hit positions point at a zero sentinel
+              row so they contribute nothing to the miss-side pool.
+    fill    — missed rows are dequantized and scattered into the cache
+              (LRU way eviction), so the next batch hits in HBM.
+
+The pooled output is the hit-side pool (from cache data) plus the miss-side
+pool (from the backing store). IO accounting happens host-side through the
+same analytic ``IOEngine`` the host store uses: per-table miss counts become
+one vectorized ``submit_batch`` each, giving per-query latencies under Eq. 3
+overlap. On CPU the kernels run in interpret mode; on TPU they compile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import CacheGeometry, JaxRowCache, dual_cache_geometry
+from repro.core.io_sim import DeviceModel, IOEngine, IOQueueConfig
+from repro.core.quant import quantize_rows, row_bytes
+from repro.core.sdm import QueryStats
+from repro.kernels import ops
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    hbm_cache_bytes: int = 8 << 20       # HBM budget for the row cache
+    ways: int = 8
+    use_kernels: bool = True             # False -> pure-jnp reference paths
+    num_devices: int = 2
+    item_time_us: float = 200.0
+    io_queue: IOQueueConfig = dataclasses.field(default_factory=IOQueueConfig)
+
+
+class DeviceServingEngine:
+    """Batched multi-query, multi-table serving over device kernels.
+
+    ``tables``: {table_id: [rows, dim] float array} — every table shares one
+    embedding dim (one backing store, one cache geometry). Rows are stored
+    int8 row-quantized, the layout the paper's DWORD-granularity SM reads
+    fetch (§4.1.1).
+    """
+
+    def __init__(self, tables: Dict[int, np.ndarray], device: DeviceModel,
+                 cfg: EngineConfig = EngineConfig()):
+        if not tables:
+            raise ValueError("need at least one table")
+        dims = {t.shape[1] for t in tables.values()}
+        if len(dims) != 1:
+            raise ValueError(f"tables must share one embedding dim, got {dims}")
+        self.cfg = cfg
+        self.dim = dims.pop()
+        self.table_ids: List[int] = list(tables)
+        self.rows_per_table = np.array([tables[t].shape[0]
+                                        for t in self.table_ids], np.int64)
+
+        # quantize and stack into one backing store + zero sentinel row
+        qts = [quantize_rows(jnp.asarray(tables[t])) for t in self.table_ids]
+        payload = np.concatenate([np.asarray(q["payload"]) for q in qts])
+        scale = np.concatenate([np.asarray(q["scale"]) for q in qts])
+        bias = np.concatenate([np.asarray(q["bias"]) for q in qts])
+        self.payload = jnp.asarray(np.concatenate(
+            [payload, np.zeros((1, self.dim), payload.dtype)]))
+        self.scale = jnp.asarray(np.r_[scale, np.float32(0)])
+        self.bias = jnp.asarray(np.r_[bias, np.float32(0)])
+        self.sentinel = jnp.int32(payload.shape[0])          # the zero row
+        self.offsets = jnp.asarray(
+            np.r_[0, np.cumsum(self.rows_per_table)[:-1]].astype(np.int32))
+
+        self.row_bytes = row_bytes(self.dim, bits=8)
+        geo = dual_cache_geometry(cfg.hbm_cache_bytes, dim=self.dim,
+                                  row_payload_bytes=self.row_bytes,
+                                  ways=cfg.ways)
+        self.cache = JaxRowCache(geo)
+        self.state = self.cache.init()
+        self.io = IOEngine(device, cfg.num_devices, cfg.io_queue)
+        self._step = jax.jit(self._make_step())
+
+    # -- device step ----------------------------------------------------------
+
+    def _make_step(self):
+        cache, cfg = self.cache, self.cfg
+
+        def step(state, idx):                                # idx [B, T, P]
+            B, T, P = idx.shape
+            tids = jnp.broadcast_to(
+                jnp.arange(T, dtype=jnp.int32)[None, :, None], idx.shape)
+            tq = tids.reshape(-1)
+            rq = idx.reshape(-1)
+            vals, hit, state = cache.lookup_device(
+                state, tq, rq, use_kernel=cfg.use_kernels)
+            # hit-side pool straight from HBM cache data
+            pooled_hit = (vals * hit[:, None]).reshape(B, T, P, -1).sum(axis=2)
+            # miss-side pool fused over the quantized backing store; hits are
+            # pointed at the zero sentinel row
+            grow = (self.offsets[tids] + idx).reshape(-1)
+            gidx = jnp.where(hit, self.sentinel, grow)
+            gidx = gidx.reshape(B * T, P).astype(jnp.int32)
+            pooled_miss = ops.embedding_gather_pool(
+                self.payload, self.scale, self.bias, gidx,
+                use_kernel=cfg.use_kernels).reshape(B, T, -1)
+            # fill: dequantize the fetched rows and insert (LRU eviction)
+            deq = (self.payload[grow].astype(jnp.float32)
+                   * self.scale[grow][:, None] + self.bias[grow][:, None])
+            state = cache.insert(state, tq, rq, deq, mask=~hit)
+            miss_counts = jnp.sum((~hit).reshape(B, T, P), axis=2)
+            return state, pooled_hit + pooled_miss, miss_counts
+
+        return step
+
+    # -- serving --------------------------------------------------------------
+
+    def serve_batch(self, idx: np.ndarray, bg_iops: float = 0.0
+                    ) -> Tuple[np.ndarray, List[QueryStats]]:
+        """idx: [B, T, P] int32 of per-table local row ids (T in the order of
+        ``table_ids``). Returns (pooled [B, T, dim] f32, per-query stats)."""
+        idx = np.asarray(idx, np.int32)
+        if (idx < 0).any() or (idx >= self.rows_per_table[None, :, None]).any():
+            raise ValueError("row index out of range")
+        state, pooled, miss = self._step(self.state, jnp.asarray(idx))
+        self.state = state
+        miss = np.asarray(miss)                              # [B, T]
+        sm_lat = np.zeros(miss.shape[0], np.float64)
+        for t in range(miss.shape[1]):
+            lats, _ = self.io.submit_batch(miss[:, t], self.row_bytes, bg_iops)
+            np.maximum(sm_lat, lats, out=sm_lat)
+        stats = [QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat[b]),
+                            sm_ios=int(miss[b].sum()),
+                            sm_time_us=float(sm_lat[b]))
+                 for b in range(miss.shape[0])]
+        return np.asarray(pooled), stats
+
+    def reference_pool(self, idx: np.ndarray) -> np.ndarray:
+        """Numpy oracle for :meth:`serve_batch`'s pooled output."""
+        idx = np.asarray(idx)
+        offs = np.asarray(self.offsets)
+        grow = offs[None, :, None] + idx                     # [B, T, P]
+        payload = np.asarray(self.payload)
+        deq = (payload[grow].astype(np.float32)
+               * np.asarray(self.scale)[grow][..., None]
+               + np.asarray(self.bias)[grow][..., None])
+        return deq.sum(axis=2)
+
+    # -- reporting ------------------------------------------------------------
+
+    @property
+    def hit_rate(self) -> float:
+        h = int(self.state["hits"])
+        m = int(self.state["misses"])
+        return h / (h + m) if h + m else 0.0

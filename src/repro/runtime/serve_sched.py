@@ -8,28 +8,36 @@ latency reduction -> 20% QPS at iso-latency for M1.
 This scheduler models a host serving loop: per query it issues all SM-table
 IO batches up front (async, io_uring-style), runs FM-side work while they are
 in flight, and completes pooling as each IO batch lands. Admission control
-bounds in-flight IOs by the device's IOPS envelope (§4.1 Tuning API). Time is
-simulated from the analytic device model — the same code path a real host
-would drive with actual completions.
+bounds in-flight IOs by the device's IOPS envelope (§4.1 Tuning API) with an
+event-driven ledger: every admitted query pushes a completion event at
+``now + sm_time`` onto a heap, queries arrive ``arrival_gap_us`` apart, and
+events that have landed by a query's arrival drain the in-flight counter
+first. Time is simulated from the analytic device model — the same code path
+a real host would drive with actual completions.
+
+``serve`` handles one query; ``serve_batch`` pushes a whole batch through the
+vectorized ``SDMEmbeddingStore.serve_batch`` data plane and then walks the
+queries through the same admission ledger in arrival order, so both paths
+yield identical results.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.io_sim import DeviceModel, IOQueueConfig
-from repro.core.sdm import SDMEmbeddingStore
+from repro.core.sdm import QueryStats, SDMEmbeddingStore
 
 
 @dataclasses.dataclass
 class ServeConfig:
     inter_op_parallel: bool = True        # A.2: async embedding ops
-    max_inflight_ios: int = 4096          # admission control
+    max_inflight_ios: int = 1 << 16       # admission control (Tuning API)
     item_compute_us: float = 200.0        # dense/FM side per query
     latency_target_us: float = 10_000.0
+    arrival_gap_us: Optional[float] = None  # None -> item_compute_us
 
 
 @dataclasses.dataclass
@@ -43,37 +51,60 @@ class ServeScheduler:
     def __init__(self, store: SDMEmbeddingStore, cfg: ServeConfig):
         self.store = store
         self.cfg = cfg
+        self.now_us = 0.0
         self.inflight = 0
+        self.deferred = 0                      # admission-control rejections
+        self._events: List[tuple] = []         # (completion_time_us, ios)
         self.p_lat: List[float] = []
 
-    def serve(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0) -> QueryResult:
-        """requests: {table_id: indices} for the user-side tables."""
+    # -- event-driven in-flight ledger ---------------------------------------
+
+    def _advance(self) -> None:
+        """One arrival tick: move the clock and retire completed IO batches."""
+        gap = self.cfg.arrival_gap_us
+        self.now_us += self.cfg.item_compute_us if gap is None else gap
+        while self._events and self._events[0][0] <= self.now_us:
+            _, ios = heapq.heappop(self._events)
+            self.inflight -= ios
+
+    def _admit(self, qs: QueryStats) -> QueryResult:
+        """Admission + latency assembly for one query's data-plane stats."""
         cfg = self.cfg
-        io_batches = []
-        total_ios = 0
-        for tid, idx in requests.items():
-            r = self.store.lookup_pool(tid, idx, bg_iops)
-            if r["ios"]:
-                io_batches.append(r["latency_us"])
-                total_ios += r["ios"]
-
-        if self.inflight + total_ios > cfg.max_inflight_ios:
+        self._advance()
+        if self.inflight + qs.sm_ios > cfg.max_inflight_ios:
             # admission control: defer (counted as one queueing delay unit)
-            return QueryResult(latency_us=cfg.latency_target_us, sm_ios=total_ios,
-                               admitted=False)
-
+            self.deferred += 1
+            return QueryResult(latency_us=cfg.latency_target_us,
+                               sm_ios=qs.sm_ios, admitted=False)
+        if qs.sm_ios:
+            heapq.heappush(self._events, (self.now_us + qs.sm_time_us, qs.sm_ios))
+            self.inflight += qs.sm_ios
         if cfg.inter_op_parallel:
             # all embedding-op IO batches fly concurrently and overlap the
             # dense compute: latency = max(compute, slowest IO) (Eq. 3)
-            sm_time = max(io_batches, default=0.0)
-            lat = max(cfg.item_compute_us, sm_time)
+            lat = max(cfg.item_compute_us, qs.sm_time_us)
         else:
             # without inter-op async execution the embedding ops' IO is
             # exposed serially after compute (the pre-A.2 operator runtime)
-            sm_time = max(io_batches, default=0.0)
-            lat = cfg.item_compute_us + sm_time
+            lat = cfg.item_compute_us + qs.sm_time_us
         self.p_lat.append(lat)
-        return QueryResult(latency_us=lat, sm_ios=total_ios)
+        return QueryResult(latency_us=lat, sm_ios=qs.sm_ios)
+
+    # -- serving entry points -------------------------------------------------
+
+    def serve(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0) -> QueryResult:
+        """requests: {table_id: indices} for the user-side tables."""
+        return self._admit(self.store.serve_query(requests, bg_iops))
+
+    def serve_batch(self, requests_list: Sequence[Dict[int, np.ndarray]],
+                    bg_iops: float = 0.0) -> List[QueryResult]:
+        """Batched serving: one vectorized data-plane pass for the whole
+        batch, then the admission ledger in arrival order. Produces the same
+        results as calling :meth:`serve` per query."""
+        return [self._admit(qs)
+                for qs in self.store.serve_batch(requests_list, bg_iops)]
+
+    # -- reporting ------------------------------------------------------------
 
     def percentile(self, p: float) -> float:
         if not self.p_lat:

@@ -3,8 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core.cache import (CacheGeometry, JaxRowCache, dual_cache_geometry,
                               set_index)

@@ -1,8 +1,7 @@
 """Quantization round-trips + pooled-embedding cache semantics (+hypothesis)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core.pooled_cache import PooledEmbeddingCache, order_invariant_hash
 from repro.core.quant import dequantize_rows, quantize_rows, row_bytes

@@ -1,0 +1,255 @@
+"""Batched serving engine: parity with the sequential path, vectorized cache
+semantics vs scalar references, and the in-flight IO ledger."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import DEVICES, SDMConfig, SDMEmbeddingStore, sample_table_metas
+from repro.core.cache_sim import BatchedRowCache, SetAssocSimCache
+from repro.core.pooled_cache import (order_invariant_hash,
+                                     order_invariant_hash_batch)
+from repro.runtime.serve_sched import ServeConfig, ServeScheduler
+
+
+def _mkstore(fm=64 << 20, pooled=8 << 20, pool=16, num_user=12, seed=1,
+             materialize_dim=16):
+    rng = np.random.default_rng(0)
+    metas = sample_table_metas(
+        rng, num_user=num_user, num_item=6, user_dim_bytes=(90, 172),
+        item_dim_bytes=(90, 172), user_pool=pool, item_pool=8,
+        total_bytes=2e9)
+    return SDMEmbeddingStore(
+        metas, DEVICES["nand_flash"],
+        SDMConfig(fm_cache_bytes=fm, pooled_cache_bytes=pooled,
+                  pooled_len_threshold=4),
+        seed=seed, materialize_dim=materialize_dim)
+
+
+# -- serve_batch vs sequential serve_query ------------------------------------
+
+def _assert_stores_equal(a, b):
+    assert dataclasses.asdict(a.stats) == dataclasses.asdict(b.stats)
+    assert (a.row_cache.hits, a.row_cache.misses) == \
+        (b.row_cache.hits, b.row_cache.misses)
+    if a.pooled_cache is not None:
+        pa, pb = a.pooled_cache, b.pooled_cache
+        assert (pa.hits, pa.misses, pa.skipped, pa.used) == \
+            (pb.hits, pb.misses, pb.skipped, pb.used)
+
+
+def test_serve_batch_bit_identical_to_sequential():
+    s_seq, s_bat = _mkstore(), _mkstore()
+    queries = [s_seq.synth_query() for _ in range(64)]
+    seq = [s_seq.serve_query(q, bg_iops=5_000) for q in queries]
+    bat = s_bat.serve_batch(queries, bg_iops=5_000)
+    assert seq == bat                     # per-query QueryStats, bit-identical
+    _assert_stores_equal(s_seq, s_bat)
+    assert s_bat.batch_fallbacks == 0, "ample caches must take the fast path"
+
+
+def test_serve_batch_warm_and_repeated_queries():
+    s_seq, s_bat = _mkstore(), _mkstore()
+    first = [s_seq.synth_query() for _ in range(40)]
+    # repeats inside one batch exercise pooled pending-hits and row re-hits
+    second = [s_seq.synth_query() for _ in range(20)] + first[:10] + first[:5]
+    for batch in (first, second):
+        seq = [s_seq.serve_query(q) for q in batch]
+        bat = s_bat.serve_batch(batch)
+        assert seq == bat
+    _assert_stores_equal(s_seq, s_bat)
+    assert s_bat.stats.pooled_hits > 0    # the repeats actually hit
+
+
+def test_serve_batch_eviction_regime_falls_back_exactly():
+    s_seq, s_bat = _mkstore(fm=1 << 16, pooled=1 << 12), \
+        _mkstore(fm=1 << 16, pooled=1 << 12)
+    queries = [s_seq.synth_query() for _ in range(30)]
+    seq = [s_seq.serve_query(q) for q in queries]
+    bat = s_bat.serve_batch(queries)
+    assert seq == bat
+    _assert_stores_equal(s_seq, s_bat)
+    assert s_bat.batch_fallbacks > 0      # tiny caches must trigger fallback
+
+
+def test_serve_batch_multi_batch_cross_eviction_parity():
+    """Regression: a fast-path batch must leave behind *exactly* the state a
+    sequential run would (LRU recency included), so later eviction-bound
+    batches — and plain sequential calls on the same store — still match."""
+    s_seq, s_bat = _mkstore(fm=1 << 20, pooled=1 << 15, materialize_dim=8), \
+        _mkstore(fm=1 << 20, pooled=1 << 15, materialize_dim=8)
+    saw_fast = saw_fallback = False
+    for b in range(10):
+        queries = [s_seq.synth_query() for _ in range(16)]
+        before = s_bat.batch_fallbacks
+        seq = [s_seq.serve_query(q) for q in queries]
+        bat = s_bat.serve_batch(queries)
+        assert seq == bat, f"diverged at batch {b}"
+        if s_bat.batch_fallbacks == before:
+            saw_fast = True
+        else:
+            saw_fallback = True
+        if b % 3 == 2:                    # sequential traffic on both stores
+            q = s_seq.synth_query()
+            assert s_seq.serve_query(q) == s_bat.serve_query(q)
+    _assert_stores_equal(s_seq, s_bat)
+    assert saw_fast and saw_fallback, \
+        "config must exercise both the fast path and the eviction fallback"
+
+
+def test_serve_batch_pooled_vectors_match():
+    s_seq, s_bat = _mkstore(), _mkstore()
+    queries = [s_seq.synth_query() for _ in range(16)]
+    for q in queries:
+        s_seq.serve_query(q)
+    s_bat.serve_batch(queries)
+    pa, pb = s_seq.pooled_cache.store, s_bat.pooled_cache.store
+    assert set(pa) == set(pb)
+    for k in pa:
+        np.testing.assert_allclose(pa[k][0], pb[k][0], rtol=1e-5, atol=1e-5)
+
+
+def test_serve_batch_faster_than_sequential():
+    import time
+    s_seq, s_bat = _mkstore(fm=256 << 20, pool=24, num_user=8), \
+        _mkstore(fm=256 << 20, pool=24, num_user=8)
+    queries = [s_seq.synth_query() for _ in range(64)]
+    t0 = time.perf_counter()
+    seq = [s_seq.serve_query(q) for q in queries]
+    t1 = time.perf_counter()
+    bat = s_bat.serve_batch(queries)
+    t2 = time.perf_counter()
+    assert seq == bat
+    # benchmark target is 10x (min-of-3); assert a lax bound to stay unflaky
+    assert (t1 - t0) / (t2 - t1) > 3.0, \
+        f"serve_batch only {(t1-t0)/(t2-t1):.1f}x faster"
+
+
+# -- vectorized cache semantics vs scalar references --------------------------
+
+@pytest.mark.parametrize("num_sets,ways", [(4, 2), (16, 4), (64, 8)])
+def test_setassoc_access_batch_matches_scalar(num_sets, ways):
+    rng = np.random.default_rng(3)
+    vec = SetAssocSimCache(num_sets, ways)
+    ref = SetAssocSimCache(num_sets, ways)
+    for _ in range(5):
+        rows = rng.integers(0, num_sets * ways * 3, size=rng.integers(1, 300))
+        hit_vec = vec.access_batch(7, rows)
+        hit_ref = np.array([ref.access_scalar(7, int(r)) for r in rows])
+        np.testing.assert_array_equal(hit_vec, hit_ref)
+        np.testing.assert_array_equal(vec.tags, ref.tags)
+        np.testing.assert_array_equal(vec.stamp, ref.stamp)
+    assert vec.hits == ref.hits and vec.misses == ref.misses
+
+
+def _batched_rowcache_scalar_ref(cache, table_id, rows):
+    """Scalar reference for BatchedRowCache.access_batch's probe->fill
+    contract: probe every element against the pre-request state, then fill
+    the unique misses."""
+    keys = cache._key(table_id, np.asarray(rows))
+    sets = cache._sets(keys)
+    hit = np.array([keys[i] in cache.tags[sets[i]] for i in range(len(keys))])
+    cache.clock += 1
+    for i in np.nonzero(hit)[0]:
+        w = int(np.nonzero(cache.tags[sets[i]] == keys[i])[0][0])
+        cache.stamp[sets[i], w] = cache.clock
+    miss_keys = np.unique(keys[~hit])
+    if len(miss_keys):
+        cache.clock += 1
+    for k in miss_keys:
+        s = int(cache._sets(np.array([k]))[0])
+        w = int(np.argmin(cache.stamp[s]))
+        if cache.tags[s, w] == -1:
+            cache.filled += 1
+        cache.tags[s, w] = k
+        cache.stamp[s, w] = cache.clock
+    cache.hits += int(hit.sum())
+    cache.misses += int(len(rows) - hit.sum())
+    return hit, len(miss_keys)
+
+
+def test_batched_rowcache_matches_scalar_reference():
+    rng = np.random.default_rng(5)
+    vec = BatchedRowCache(64 << 10, row_bytes=100, ways=4)
+    ref = BatchedRowCache(64 << 10, row_bytes=100, ways=4)
+    for step in range(8):
+        rows = rng.integers(0, 2_000, size=rng.integers(1, 200))
+        hit_v, ios_v = vec.access_batch(step % 3, rows)
+        hit_r, ios_r = _batched_rowcache_scalar_ref(ref, step % 3, rows)
+        np.testing.assert_array_equal(hit_v, hit_r)
+        assert ios_v == ios_r
+        np.testing.assert_array_equal(np.sort(vec.tags, axis=1),
+                                      np.sort(ref.tags, axis=1))
+    assert (vec.hits, vec.misses) == (ref.hits, ref.misses)
+
+
+def test_batched_rowcache_dedups_ios_within_request():
+    c = BatchedRowCache(1 << 20, row_bytes=100)
+    hit, ios = c.access_batch(0, np.array([5, 5, 5, 9]))
+    assert not hit.any()          # probe-then-fill: duplicates all miss...
+    assert ios == 2               # ...but the batched IO fetches each row once
+    hit, ios = c.access_batch(0, np.array([5, 9]))
+    assert hit.all() and ios == 0
+
+
+def test_order_invariant_hash_batch_matches_scalar():
+    rng = np.random.default_rng(11)
+    parts = [rng.integers(0, 1 << 30, size=n) for n in (1, 7, 19, 3)]
+    offs = np.r_[0, np.cumsum([len(p) for p in parts])[:-1]]
+    batch = order_invariant_hash_batch(42, np.concatenate(parts), offs)
+    for i, p in enumerate(parts):
+        assert int(batch[i]) == order_invariant_hash(42, p)
+
+
+# -- scheduler: ledger + admission control ------------------------------------
+
+def test_scheduler_serve_and_serve_batch_agree():
+    s1, s2 = _mkstore(), _mkstore()
+    sch1 = ServeScheduler(s1, ServeConfig())
+    sch2 = ServeScheduler(s2, ServeConfig())
+    queries = [s1.synth_query() for _ in range(32)]
+    r1 = [sch1.serve(q, bg_iops=5_000) for q in queries]
+    r2 = sch2.serve_batch(queries, bg_iops=5_000)
+    assert r1 == r2
+    assert sch1.inflight == sch2.inflight
+    assert sch1.p_lat == sch2.p_lat
+
+
+def test_inflight_ledger_tracks_and_drains():
+    store = _mkstore()
+    # no arrivals gap: IOs can never complete before the next query arrives
+    sch = ServeScheduler(store, ServeConfig(arrival_gap_us=0.0,
+                                            max_inflight_ios=1 << 30))
+    for _ in range(5):
+        sch.serve(store.synth_query())
+    assert sch.inflight > 0, "in-flight counter must actually track IOs"
+    total = sch.inflight
+    # a long quiet gap drains every outstanding completion event
+    sch.cfg.arrival_gap_us = 1e9
+    sch.serve(store.synth_query())
+    assert sch.inflight < total
+
+
+def test_admission_control_defers_when_saturated():
+    store = _mkstore()
+    sch = ServeScheduler(store, ServeConfig(arrival_gap_us=0.0,
+                                            max_inflight_ios=64))
+    results = [sch.serve(store.synth_query()) for _ in range(12)]
+    rejected = [r for r in results if not r.admitted]
+    assert rejected, "saturating a 64-IO budget must defer queries"
+    assert sch.deferred == len(rejected)
+    assert all(r.latency_us == sch.cfg.latency_target_us for r in rejected)
+    # deferred queries never enter the ledger
+    assert sch.inflight <= 64
+
+
+def test_admission_recovers_after_drain():
+    store = _mkstore()
+    sch = ServeScheduler(store, ServeConfig(arrival_gap_us=0.0,
+                                            max_inflight_ios=64))
+    for _ in range(12):
+        sch.serve(store.synth_query())
+    assert sch.deferred > 0
+    sch.cfg.arrival_gap_us = 1e9          # drain everything
+    r = sch.serve(store.synth_query())
+    assert r.admitted

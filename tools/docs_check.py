@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Stale-doc guard: every file path or repro.* module referenced from
+README.md / docs/*.md must exist in the repo.
+
+Checked reference shapes:
+  * path-like:   src/repro/core/sdm.py, benchmarks/fig3_io.py, docs/KERNELS.md,
+                 examples/serve_dlrm.py, tests/..., tools/...  (also bare
+                 directory references like `src/repro/core/`)
+  * module-like: repro.core.sdm, repro.runtime.engine.DeviceServingEngine
+                 (resolved against src/, trailing attribute names allowed)
+
+Exit 1 listing every missing reference. Run via `make docs-check`.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+PATH_RE = re.compile(
+    r"\b(?:src|benchmarks|examples|tests|tools|docs)/[A-Za-z0-9_./-]+")
+MODULE_RE = re.compile(r"\brepro(?:\.[A-Za-z_][A-Za-z0-9_]*)+")
+
+
+def module_exists(dotted: str) -> bool:
+    """Resolve repro.a.b[.attr...]: the dotted path must reach a real module
+    or package; trailing attribute names are allowed past a module file, but
+    past a bare package only CamelCase names (``__init__`` re-exports) pass —
+    a lowercase leftover looks like a missing module and fails."""
+    parts = dotted.split(".")
+    for i in range(len(parts), 0, -1):
+        base = ROOT / "src" / pathlib.Path(*parts[:i])
+        if base.with_suffix(".py").exists():
+            return True              # module file; rest are attributes
+        if (base / "__init__.py").exists():
+            return i == len(parts) or parts[i][0].isupper()
+    return False
+
+
+def main() -> int:
+    missing = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            missing.append((doc.name, str(doc.relative_to(ROOT)), "doc file"))
+            continue
+        text = doc.read_text()
+        for ref in sorted(set(PATH_RE.findall(text))):
+            target = ROOT / ref.rstrip("/").rstrip(".")
+            if not target.exists():
+                missing.append((doc.name, ref, "path"))
+        for ref in sorted(set(MODULE_RE.findall(text))):
+            if not module_exists(ref):
+                missing.append((doc.name, ref, "module"))
+    if missing:
+        print("docs-check: stale references found:")
+        for doc, ref, kind in missing:
+            print(f"  {doc}: {ref}  ({kind})")
+        return 1
+    n_docs = len(DOC_FILES)
+    print(f"docs-check: OK ({n_docs} docs, all references resolve)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
