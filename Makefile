@@ -1,14 +1,20 @@
 PYTHONPATH := src:.
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test bench-smoke docs-check check
+.PHONY: test test-fast bench-smoke docs-check check
 
 test:
 	$(PY) -m pytest -x -q
 
+# tier-1 minus the slow markers (deep property sweeps, traffic-driven
+# benchmark goldens, the XLA dry-run)
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
 bench-smoke:
 	$(PY) benchmarks/run.py --only serve_batched
 	$(PY) benchmarks/run.py --only fig3_io
+	$(PY) -c "from benchmarks import scenarios; scenarios.run(num_queries=64)"
 
 docs-check:
 	$(PY) tools/docs_check.py

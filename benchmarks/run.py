@@ -18,8 +18,9 @@ def main() -> None:
 
     from benchmarks import (depruning, fig1_skew, fig3_io, fig45_locality,
                             fig6_cache_org, interop_warmup, kernels,
-                            serve_batched, table8_power, table9_scaleout,
-                            table11_multitenancy, table34_pooled)
+                            scenarios, serve_batched, table8_power,
+                            table9_scaleout, table11_multitenancy,
+                            table34_pooled)
 
     suites = [
         ("serve_batched", serve_batched.run),
@@ -31,6 +32,7 @@ def main() -> None:
         ("table8_power", table8_power.run),
         ("table9_scaleout", table9_scaleout.run),
         ("table11_multitenancy", table11_multitenancy.run),
+        ("scenarios", scenarios.run),
         ("depruning", depruning.run),
         ("interop_warmup", interop_warmup.run),
         ("kernels", kernels.run),

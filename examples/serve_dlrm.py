@@ -13,19 +13,27 @@ Queries flow through two data planes and both are exercised here:
                  ``cache_probe`` + ``gather_pool`` Pallas kernels with an HBM
                  row cache (numerics checked against the numpy oracle).
 
-Run: PYTHONPATH=src python examples/serve_dlrm.py [--queries 128 --batch 32]
+The host-plane traffic comes from the workload engine: pick any archetype
+from ``repro.workloads.ARCHETYPES`` (steady Zipf, popularity drift, diurnal,
+MMPP-bursty, multi-tenant) and its trace — M1-statistics tables, timed
+arrivals — drives ``serve_batch`` in vectorized chunks.
+
+Run: PYTHONPATH=src python examples/serve_dlrm.py \
+         [--queries 128 --batch 32 --archetype zipf_steady]
 """
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DEVICES, SDMConfig, SDMEmbeddingStore, sample_table_metas
+from repro.core import DEVICES, SDMConfig, SDMEmbeddingStore
 from repro.core.power import HW_L, HW_SS, Workload, run_scenario
 from repro.models import dlrm
 from repro.runtime.engine import DeviceServingEngine, EngineConfig
 from repro.runtime.serve_sched import ServeConfig, ServeScheduler
+from repro.workloads import ARCHETYPES, build_trace
 
 
 def main():
@@ -33,6 +41,8 @@ def main():
     ap.add_argument("--queries", type=int, default=128)
     ap.add_argument("--batch", type=int, default=32, help="serving batch size")
     ap.add_argument("--item-batch", type=int, default=50)
+    ap.add_argument("--archetype", default="zipf_steady",
+                    choices=sorted(ARCHETYPES))
     args = ap.parse_args()
 
     # model (small, materialized) + SDM inventory (M1-statistics, virtual)
@@ -41,11 +51,18 @@ def main():
                          bottom_mlp=(128, 64, 32), top_mlp=(128, 1))
     params = dlrm.init_params(arch, jax.random.PRNGKey(1))
     rng = np.random.default_rng(2)
-    metas = sample_table_metas(
-        rng, num_user=61, num_item=30, user_dim_bytes=(90, 172),
-        item_dim_bytes=(90, 172), user_pool=42, item_pool=9, total_bytes=4e9)
+
+    # host-plane traffic: the chosen archetype at the example's M1 scale
+    # (61 user + 30 item tables, 4 GB inventory — Table 6 statistics)
+    spec = ARCHETYPES[args.archetype]
+    spec = dataclasses.replace(
+        spec, num_queries=args.queries,
+        tenants=tuple(dataclasses.replace(
+            t, model="dlrm-m1", num_user_tables=61, num_item_tables=30,
+            table_bytes=4e9) for t in spec.tenants))
+    trace = build_trace(spec)
     store = SDMEmbeddingStore(
-        metas, DEVICES["nand_flash"],
+        trace.all_metas(), DEVICES["nand_flash"],
         SDMConfig(fm_cache_bytes=128 << 20, pooled_cache_bytes=16 << 20),
         seed=3)
     sched = ServeScheduler(store, ServeConfig(inter_op_parallel=True,
@@ -62,11 +79,12 @@ def main():
     scores_sum = 0.0
     max_dev_err = 0.0
     done = 0
-    while done < args.queries:
-        nb = min(args.batch, args.queries - done)
-        # SDM host plane: one batched pass for nb queries' user-table IO
-        sched.serve_batch([store.synth_query() for _ in range(nb)],
-                          bg_iops=10_000)
+    for ch in trace.chunks(args.batch):
+        nb = len(ch.requests)
+        # SDM host plane: one batched pass for this trace chunk's user-table
+        # IO, admission ledger driven by the trace's arrival times
+        sched.serve_batch(ch.requests, bg_iops=10_000,
+                          arrivals_us=ch.arrival_us)
         # device plane: pooled user embeddings for the same nb queries
         u_idx = rng.integers(0, 50_000, (nb, n_user, arch.pooling))
         pooled, _ = engine.serve_batch(u_idx, bg_iops=10_000)
@@ -79,7 +97,9 @@ def main():
         scores_sum += float(scores.mean())
         done += nb
 
-    print(f"served {args.queries} queries (batch={args.batch}) x {Bi} items")
+    print(f"served {done} queries of trace '{trace.name}' "
+          f"(batch={args.batch}, offered {trace.offered_qps:.0f} QPS) "
+          f"x {Bi} items")
     print(f"  p50/p95/p99 latency: {sched.percentile(50):6.0f} / "
           f"{sched.percentile(95):6.0f} / {sched.percentile(99):6.0f} us")
     print(f"  row-cache hit rate:  {store.row_hit_rate:.3f}")

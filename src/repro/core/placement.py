@@ -39,6 +39,13 @@ def assign(metas: Sequence[TableMeta], cfg: PlacementConfig) -> Dict[int, str]:
         if m.kind == "item" and cfg.item_tables_on_fm:
             out[m.table_id] = FM_DIRECT
 
+    if cfg.policy == "fm_only":
+        # DRAM-only host (Table 7's HW-L): the whole model lives in FM; no
+        # table ever touches SM. The cluster simulator's baseline tier.
+        for m in metas:
+            out[m.table_id] = FM_DIRECT
+        return out
+
     if cfg.policy == "sm_only_with_cache":
         for m in metas:
             out.setdefault(m.table_id, SM_CACHED)

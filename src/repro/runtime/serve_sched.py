@@ -59,18 +59,27 @@ class ServeScheduler:
 
     # -- event-driven in-flight ledger ---------------------------------------
 
-    def _advance(self) -> None:
-        """One arrival tick: move the clock and retire completed IO batches."""
-        gap = self.cfg.arrival_gap_us
-        self.now_us += self.cfg.item_compute_us if gap is None else gap
+    def _advance(self, at_us: Optional[float] = None) -> None:
+        """One arrival tick: move the clock and retire completed IO batches.
+
+        Without ``at_us`` the clock steps by the configured arrival gap
+        (synthetic constant-rate traffic); with it the clock jumps to the
+        query's absolute trace arrival time (trace-driven traffic — the
+        clock never moves backwards, so a burst of queries arriving closer
+        together than IOs complete genuinely accumulates in-flight IOs)."""
+        if at_us is None:
+            gap = self.cfg.arrival_gap_us
+            self.now_us += self.cfg.item_compute_us if gap is None else gap
+        else:
+            self.now_us = max(self.now_us, float(at_us))
         while self._events and self._events[0][0] <= self.now_us:
             _, ios = heapq.heappop(self._events)
             self.inflight -= ios
 
-    def _admit(self, qs: QueryStats) -> QueryResult:
+    def _admit(self, qs: QueryStats, at_us: Optional[float] = None) -> QueryResult:
         """Admission + latency assembly for one query's data-plane stats."""
         cfg = self.cfg
-        self._advance()
+        self._advance(at_us)
         if self.inflight + qs.sm_ios > cfg.max_inflight_ios:
             # admission control: defer (counted as one queueing delay unit)
             self.deferred += 1
@@ -92,17 +101,29 @@ class ServeScheduler:
 
     # -- serving entry points -------------------------------------------------
 
-    def serve(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0) -> QueryResult:
-        """requests: {table_id: indices} for the user-side tables."""
-        return self._admit(self.store.serve_query(requests, bg_iops))
+    def serve(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0,
+              at_us: Optional[float] = None) -> QueryResult:
+        """requests: {table_id: indices} for the user-side tables.
+        ``at_us``: optional absolute arrival time (trace-driven traffic)."""
+        return self._admit(self.store.serve_query(requests, bg_iops), at_us)
 
     def serve_batch(self, requests_list: Sequence[Dict[int, np.ndarray]],
-                    bg_iops: float = 0.0) -> List[QueryResult]:
+                    bg_iops: float = 0.0,
+                    arrivals_us: Optional[Sequence[float]] = None
+                    ) -> List[QueryResult]:
         """Batched serving: one vectorized data-plane pass for the whole
         batch, then the admission ledger in arrival order. Produces the same
-        results as calling :meth:`serve` per query."""
-        return [self._admit(qs)
-                for qs in self.store.serve_batch(requests_list, bg_iops)]
+        results as calling :meth:`serve` per query. ``arrivals_us`` (aligned
+        with ``requests_list``) drives the ledger from trace arrival times
+        instead of the synthetic constant gap."""
+        if arrivals_us is not None and len(arrivals_us) != len(requests_list):
+            raise ValueError(
+                f"arrivals_us has {len(arrivals_us)} entries for "
+                f"{len(requests_list)} requests")
+        stats = self.store.serve_batch(requests_list, bg_iops)
+        if arrivals_us is None:
+            return [self._admit(qs) for qs in stats]
+        return [self._admit(qs, at) for qs, at in zip(stats, arrivals_us)]
 
     # -- reporting ------------------------------------------------------------
 
@@ -120,4 +141,4 @@ class ServeScheduler:
         lat = np.asarray(self.p_lat)
         meeting = (lat <= target).mean()
         mean_lat = lat.mean()
-        return meeting * 1e6 / max(mean_lat, 1.0)
+        return float(meeting * 1e6 / max(mean_lat, 1.0))

@@ -1,0 +1,16 @@
+"""Trace-driven workload engine: fleet-shaped traffic for the SDM stack.
+
+Generates reproducible, seedable :class:`~repro.workloads.trace.Trace`
+objects from parameterized archetypes (Zipf with popularity drift, diurnal
+and MMPP-bursty arrivals, pooling-factor mixes, multi-model tenancy drawn
+from the paper's Table 6 models) and feeds them to
+``ServeScheduler.serve_batch`` / ``runtime.cluster.ClusterSim`` in
+vectorized chunks.
+"""
+from repro.workloads.trace import (Trace, TraceChunk, interleave_arrivals,  # noqa: F401
+                                   mmpp_arrivals, nonhomogeneous_arrivals,
+                                   poisson_arrivals, windowed_qps,
+                                   zipf_indices_drift)
+from repro.workloads.archetypes import (ARCHETYPES, ArrivalSpec,  # noqa: F401
+                                        TenantSpec, WorkloadSpec, build_trace,
+                                        tenant_table_metas)

@@ -7,3 +7,11 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (deep property sweeps, traffic-driven "
+        "benchmark goldens, the XLA dry-run); deselect with `make test-fast` "
+        "/ `pytest -m 'not slow'`")

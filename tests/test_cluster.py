@@ -1,0 +1,127 @@
+"""Cluster simulator: routing, device heterogeneity, steady-state warmup,
+fleet-power aggregation — and the Table 8 ordering from simulated traffic."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.power import HW_AN, HW_L, HW_SS
+from repro.runtime.cluster import (ClusterConfig, ClusterSim, HostSpec,
+                                   homogeneous_cluster, host_compute_qps)
+from repro.workloads import (ARCHETYPES, ArrivalSpec, TenantSpec,
+                             WorkloadSpec, build_trace)
+
+
+def _trace(num_queries=48, **kw):
+    spec = dataclasses.replace(ARCHETYPES["zipf_steady"],
+                               num_queries=num_queries, **kw)
+    return build_trace(spec)
+
+
+def _mt_trace(num_queries=48):
+    return build_trace(dataclasses.replace(
+        ARCHETYPES["multi_tenant"], num_queries=num_queries))
+
+
+# -- routing ------------------------------------------------------------------
+
+def test_routing_modes():
+    trace = _mt_trace()
+    hosts = (HostSpec("h", HW_SS, count=3),)
+    sticky = ClusterSim(ClusterConfig(hosts, routing="tenant_sticky"))
+    rr = ClusterSim(ClusterConfig(hosts, routing="round_robin"))
+    per = ClusterSim(ClusterConfig(hosts, routing="per_tenant"))
+    a = sticky.route(trace)
+    # sticky: a tenant's queries always land on the same host
+    for t in np.unique(trace.tenant):
+        assert len(np.unique(a[trace.tenant == t])) == 1
+    np.testing.assert_array_equal(rr.route(trace),
+                                  np.arange(len(trace)) % 3)
+    np.testing.assert_array_equal(per.route(trace), trace.tenant % 3)
+    with pytest.raises(ValueError):
+        ClusterSim(ClusterConfig(hosts, routing="nope")).route(trace)
+
+
+def test_host_replicas_expand_with_unique_names():
+    sim = ClusterSim(ClusterConfig((HostSpec("a", HW_SS, count=2),
+                                    HostSpec("b", HW_L, device=None)),))
+    assert [s.name for s in sim.specs] == ["a#0", "a#1", "b"]
+
+
+# -- device heterogeneity -----------------------------------------------------
+
+def test_dram_only_host_never_touches_sm():
+    rep = homogeneous_cluster(HostSpec("HW-L", HW_L, device=None)).run(_trace())
+    h = rep.hosts[0]
+    assert h.sm_ios == 0 and h.iops_occupancy == 0.0
+    assert h.queries == 48 and h.p99_us > 0
+
+
+def test_sdm_host_does_io_and_reports_occupancy():
+    rep = homogeneous_cluster(
+        HostSpec("HW-SS", HW_SS, device="nand_flash")).run(_trace())
+    h = rep.hosts[0]
+    assert h.sm_ios > 0
+    assert 0 < h.iops_occupancy
+    assert h.feasible_qps > 0
+
+
+def test_demand_scale_throttles_device_bound_hosts():
+    """Pricing the full model's per-query IO demand (scale k) must lower the
+    device-feasibility leg by ~k once the device is the binding constraint."""
+    trace = _trace()
+    reps = {}
+    for scale in (1.0, 200.0):
+        reps[scale] = homogeneous_cluster(
+            HostSpec("HW-AN", HW_AN, device="nand_flash", demand_scale=scale),
+            latency_target_us=300.0).run(trace).hosts[0]
+    assert reps[200.0].feasible_qps < reps[1.0].feasible_qps
+    assert reps[200.0].feasible_qps < host_compute_qps(HW_AN)
+
+
+def test_warmup_measures_steady_state():
+    trace = _trace()
+    spec = HostSpec("HW-SS", HW_SS, device="nand_flash")
+    cold = homogeneous_cluster(spec).run(trace).hosts[0]
+    warm = homogeneous_cluster(spec).run(trace, warmup=True).hosts[0]
+    assert warm.queries == cold.queries
+    assert warm.sm_ios < cold.sm_ios     # compulsory misses absorbed
+
+
+# -- fleet aggregation --------------------------------------------------------
+
+def test_fleet_power_scales_to_demand_and_skips_idle_hosts():
+    trace = _trace()                      # single tenant
+    rep = homogeneous_cluster(HostSpec("HW-SS", HW_SS, device="nand_flash"),
+                              count=3).run(trace)
+    served = [h for h in rep.hosts if h.queries > 0]
+    assert len(served) == 1               # sticky tenant -> one active host
+    fp = rep.fleet_power(10 * served[0].feasible_qps)
+    assert fp.hosts == pytest.approx(10.0)
+    assert fp.power == pytest.approx(10 * served[0].power)
+
+
+def test_cluster_percentiles_aggregate_all_hosts():
+    trace = _mt_trace()
+    rep = ClusterSim(ClusterConfig((HostSpec("h", HW_SS, count=3),),
+                                   routing="per_tenant")).run(trace)
+    assert sum(h.queries for h in rep.hosts) == len(trace)
+    assert rep.p50_us <= rep.p95_us <= rep.p99_us
+
+
+# -- the acceptance-criterion ordering, small scale ---------------------------
+
+@pytest.mark.slow
+def test_table8_power_ordering_from_traffic():
+    """HW-SS + SDM must beat DRAM-only HW-L on fleet power at equal demand,
+    out of simulated traffic (the Table 8 headline, not closed-form QPS)."""
+    trace = _trace(num_queries=96)
+    rep_l = homogeneous_cluster(
+        HostSpec("HW-L", HW_L, device=None)).run(trace, passes=2)
+    rep_ss = homogeneous_cluster(
+        HostSpec("HW-SS", HW_SS, device="nand_flash")).run(trace, passes=2)
+    demand = 240 * 1200
+    p_l, p_ss = rep_l.fleet_power(demand), rep_ss.fleet_power(demand)
+    assert p_ss.power < p_l.power
+    # and the saving lands in the paper's neighborhood (20%)
+    assert 0.05 < 1 - p_ss.power / p_l.power < 0.35

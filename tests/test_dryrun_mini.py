@@ -15,22 +15,32 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import SHAPES, get_config
 from repro.launch import sharding as sh
 from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_mesh_compat
 from repro.models.layers import set_logical_rules
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh_compat((4, 2), ("data", "model"))
 cfg = get_config("smollm-135m").reduced()
 import dataclasses
 shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=8)
 step, args, in_sp, out_sp, plan = steps_mod.build_step(cfg, shape, mesh)
 set_logical_rules(plan.rules())
-with jax.set_mesh(mesh):
-    compiled = jax.jit(step, in_shardings=in_sp, out_shardings=out_sp).lower(*args).compile()
+
+# Older JAX (0.4.x) accepts only Sharding objects in in_/out_shardings and has
+# no jax.set_mesh; bind the specs to the mesh and use the mesh context manager.
+def _to_sharding(sp):
+    return NamedSharding(mesh, P() if sp is None else sp)
+is_spec = lambda x: x is None or isinstance(x, P)
+in_sh = jax.tree.map(_to_sharding, in_sp, is_leaf=is_spec)
+out_sh = jax.tree.map(_to_sharding, out_sp, is_leaf=is_spec)
+set_ctx = getattr(jax, "set_mesh", None)
+with (set_ctx(mesh) if set_ctx else mesh):
+    compiled = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh).lower(*args).compile()
 cost = compiled.cost_analysis()
+cost = cost[0] if isinstance(cost, (list, tuple)) else cost
 mem = compiled.memory_analysis()
 print(json.dumps({
     "flops": float(cost.get("flops", 0)),

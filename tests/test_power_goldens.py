@@ -1,0 +1,89 @@
+"""Golden-value regression tests: the paper's Table 8/9/11 headline numbers,
+pinned with tolerance bands at two levels — the closed-form scenario engine
+(`core/power.py`, exact-ish) and the traffic-driven benchmark entry points
+(looser bands), so workload-engine refactors can't silently move the
+reproduced results."""
+import pytest
+
+from repro.core.power import (HW_AN, HW_AO, HW_L, HW_S, HW_SS, Workload,
+                              multitenancy_power, normalize, run_scenario)
+
+
+# -- closed-form scenario rows (tight bands) ----------------------------------
+
+def test_table8_rows_golden():
+    w = Workload("m1", sm_tables=50, avg_pool=42, row_bytes=59,
+                 cache_hit_rate=0.96, total_qps=240 * 1200)
+    base = run_scenario("HW-L", HW_L, w, use_sdm=False, qps_override=240)
+    sdm = run_scenario("HW-SS + SDM", HW_SS, w, use_sdm=True)
+    # paper Table 8: 1200 hosts at power 1.0 vs 2400 hosts at power 0.4
+    assert base.hosts == pytest.approx(1200, rel=0.01)
+    assert base.total_power == pytest.approx(1200, rel=0.02)
+    assert sdm.qps_per_host == pytest.approx(120, rel=0.05)
+    assert sdm.hosts == pytest.approx(2400, rel=0.05)
+    assert sdm.total_power == pytest.approx(960, rel=0.05)
+    assert 1 - sdm.total_power / base.total_power == pytest.approx(0.20, abs=0.02)
+
+
+def test_table9_rows_golden():
+    w = Workload("m2", sm_tables=450, avg_pool=25, row_bytes=72,
+                 cache_hit_rate=0.90, latency_budget_us=300.0,
+                 total_qps=450 * 1500)
+    scale_out = run_scenario("HW-AN + ScaleOut", HW_AN, w, use_sdm=False,
+                             qps_override=450, remote_hosts_per=0.2,
+                             remote=HW_S)
+    nand = run_scenario("HW-AN + SDM", HW_AN, w, use_sdm=True)
+    opt = run_scenario("HW-AO + SDM", HW_AO, w, use_sdm=True)
+    rows = normalize([scale_out, nand, opt], "HW-AN + ScaleOut")
+    # paper Table 9: Nand throttles to ~230 QPS, Optane holds 450
+    assert rows[1].qps_per_host == pytest.approx(230, rel=0.15)
+    assert rows[2].qps_per_host == pytest.approx(450, rel=0.01)
+    # normalized per-host power: baseline 1.0; Optane pays the SSD adder only
+    assert rows[0].host_power == pytest.approx(1.0, abs=1e-9)
+    assert 1.0 < rows[2].host_power < 1.02
+    saving = 1 - rows[2].total_power / rows[0].total_power
+    assert saving == pytest.approx(0.05, abs=0.02)            # paper: ~5%
+
+
+def test_table11_fleet_power_golden():
+    mt = multitenancy_power(base_util=0.63, sdm_util=0.90,
+                            extra_host_power_frac=0.01)
+    assert mt["HW-FAO + SDM"]["fleet_power"] == pytest.approx(0.71, abs=0.01)
+    assert mt["saving"] == pytest.approx(0.29, abs=0.01)
+
+
+# -- traffic-driven benchmark outputs (loose bands) ---------------------------
+
+@pytest.mark.slow
+def test_table8_benchmark_golden():
+    from benchmarks.table8_power import run
+    out = run(num_queries=192)
+    assert out["power_saving"] == pytest.approx(0.20, abs=0.02)
+    sim = out["sim"]
+    assert sim["power_saving"] == pytest.approx(0.20, abs=0.10)
+    assert sim["HW-SS + SDM"]["power"] < sim["HW-L"]["power"]
+
+
+@pytest.mark.slow
+def test_table9_benchmark_golden():
+    from benchmarks.table9_scaleout import run
+    out = run()             # the default trace length is the tuned operating
+    sim = out["sim"]        # point (warm hit rate ~0.90); shorter traces warm
+                            # a larger fraction of the working set
+    # measured warm hit rate must sit near the paper's 90% operating point
+    assert sim["measured_hit_rate"] == pytest.approx(0.90, abs=0.05)
+    # Nand throttles well below the accelerator; Optane is compute-bound
+    assert sim["nand_qps"] < 320                       # paper: 230
+    assert sim["optane_qps"] == pytest.approx(450, rel=0.01)
+    assert sim["power_saving"] == pytest.approx(0.05, abs=0.04)
+
+
+@pytest.mark.slow
+def test_table11_benchmark_golden():
+    from benchmarks.table11_multitenancy import run
+    out = run(num_queries=900)
+    sim = out["sim"]
+    assert not sim["fits_host_dram"] and sim["fits_sdm"]
+    assert sim["sdm_utilization"] > sim["utilization"]
+    assert sim["colocated_hosts"] < sim["dedicated_hosts"]
+    assert sim["saving"] == pytest.approx(0.29, abs=0.12)      # paper: ~29%

@@ -1,0 +1,191 @@
+"""Property-based differential tests: randomized workload traces pin the
+vectorized serving paths to their sequential oracles.
+
+Each property has two entry points: a hypothesis ``@given`` wrapper (runs
+when hypothesis is installed, skips otherwise — see ``hyp_compat``) and a
+seeded-parametrize fallback that always runs, so the differential contract
+is enforced in bare containers too. Both call the same ``_check_*`` core.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+
+from repro.core import DEVICES, SDMConfig, SDMEmbeddingStore
+from repro.core.cache_sim import SetAssocSimCache
+from repro.runtime.serve_sched import ServeConfig, ServeScheduler
+from repro.workloads import (ARCHETYPES, ArrivalSpec, TenantSpec,
+                             WorkloadSpec, build_trace)
+
+# store regimes the batched path must survive: ample caches (fast path),
+# tiny caches (eviction fallback), pooled cache on/off
+STORE_REGIMES = {
+    "ample": dict(fm_cache_bytes=32 << 20, pooled_cache_bytes=4 << 20),
+    "evicting": dict(fm_cache_bytes=1 << 16, pooled_cache_bytes=1 << 12),
+    "row_only": dict(fm_cache_bytes=1 << 20, pooled_cache_bytes=0),
+}
+
+
+def _random_spec(seed: int) -> WorkloadSpec:
+    """A randomized workload spec: arrival shape, tenancy, drift, pooling
+    mix all drawn from ``seed``."""
+    rng = np.random.default_rng(seed)
+    process = ("poisson", "diurnal", "mmpp")[rng.integers(3)]
+    n_tenants = int(rng.integers(1, 3))
+    tenants = tuple(
+        TenantSpec(f"t{i}", model=("dlrm-m1", "dlrm-m2")[rng.integers(2)],
+                   weight=float(rng.uniform(0.5, 2.0)),
+                   num_user_tables=int(rng.integers(2, 5)),
+                   num_item_tables=1, table_bytes=2e7,
+                   drift_period_us=float(rng.choice([0.0, 2e4])),
+                   pool_sigma=float(rng.choice([0.0, 0.3])))
+        for i in range(n_tenants))
+    return WorkloadSpec(f"prop{seed}",
+                        ArrivalSpec(process, rate_qps=float(rng.uniform(500, 4000))),
+                        tenants, num_queries=36, seed=seed)
+
+
+def _check_trace_differential(seed: int, regime: str) -> None:
+    """serve_batch over a workload trace == sequential serve_query, down to
+    QueryStats bits, latency lists, the in-flight ledger and cache state."""
+    spec = _random_spec(seed)
+    trace = build_trace(spec)
+    mk = lambda: SDMEmbeddingStore(
+        trace.all_metas(), DEVICES["nand_flash"],
+        SDMConfig(pooled_len_threshold=4, **STORE_REGIMES[regime]), seed=7)
+    s_seq, s_bat = mk(), mk()
+    cfg = ServeConfig(item_compute_us=150.0)
+    sch_seq = ServeScheduler(s_seq, dataclasses.replace(cfg))
+    sch_bat = ServeScheduler(s_bat, dataclasses.replace(cfg))
+    chunk = int(np.random.default_rng(seed + 1).integers(3, 17))
+    for ch in trace.chunks(chunk):
+        r_seq = [sch_seq.serve(q, bg_iops=3_000, at_us=at)
+                 for q, at in zip(ch.requests, ch.arrival_us)]
+        r_bat = sch_bat.serve_batch(ch.requests, bg_iops=3_000,
+                                    arrivals_us=ch.arrival_us)
+        assert r_seq == r_bat
+    assert sch_seq.p_lat == sch_bat.p_lat
+    assert sch_seq.inflight == sch_bat.inflight
+    assert sch_seq.deferred == sch_bat.deferred
+    assert dataclasses.asdict(s_seq.stats) == dataclasses.asdict(s_bat.stats)
+    assert (s_seq.row_cache.hits, s_seq.row_cache.misses) == \
+        (s_bat.row_cache.hits, s_bat.row_cache.misses)
+    if s_seq.pooled_cache is not None:
+        assert (s_seq.pooled_cache.hits, s_seq.pooled_cache.misses) == \
+            (s_bat.pooled_cache.hits, s_bat.pooled_cache.misses)
+
+
+@pytest.mark.parametrize("regime", sorted(STORE_REGIMES))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_trace_differential_seeded(seed, regime):
+    _check_trace_differential(seed, regime)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("regime", sorted(STORE_REGIMES))
+@pytest.mark.parametrize("seed", range(2, 7))
+def test_trace_differential_seeded_deep(seed, regime):
+    _check_trace_differential(seed, regime)
+
+
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1 << 16), st.sampled_from(sorted(STORE_REGIMES)))
+def test_trace_differential_property(seed, regime):
+    _check_trace_differential(seed, regime)
+
+
+# -- SetAssocSimCache: vectorized access vs scalar oracle ---------------------
+
+
+def _check_setassoc_differential(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    num_sets = int(2 ** rng.integers(2, 7))
+    ways = int(rng.integers(1, 9))
+    vec, ref = SetAssocSimCache(num_sets, ways), SetAssocSimCache(num_sets, ways)
+    for _ in range(4):
+        table = int(rng.integers(0, 4))
+        rows = rng.integers(0, num_sets * ways * 4, size=int(rng.integers(1, 250)))
+        hit_vec = vec.access_batch(table, rows)
+        hit_ref = np.array([ref.access_scalar(table, int(r)) for r in rows],
+                           bool)
+        np.testing.assert_array_equal(hit_vec, hit_ref)
+        np.testing.assert_array_equal(vec.tags, ref.tags)
+        np.testing.assert_array_equal(vec.stamp, ref.stamp)
+    assert (vec.hits, vec.misses) == (ref.hits, ref.misses)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_setassoc_differential_seeded(seed):
+    _check_setassoc_differential(seed)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1 << 16))
+def test_setassoc_differential_property(seed):
+    _check_setassoc_differential(seed)
+
+
+# -- trace engine invariants --------------------------------------------------
+
+
+def _check_trace_invariants(seed: int) -> None:
+    spec = _random_spec(seed)
+    t1, t2 = build_trace(spec), build_trace(spec)
+    # reproducible: same (spec, seed) -> bit-identical trace
+    np.testing.assert_array_equal(t1.arrival_us, t2.arrival_us)
+    np.testing.assert_array_equal(t1.tenant, t2.tenant)
+    assert len(t1.requests) == len(t2.requests) == spec.num_queries
+    for a, b in zip(t1.requests, t2.requests):
+        assert a.keys() == b.keys()
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k])
+    # arrivals are a nondecreasing timeline
+    assert np.all(np.diff(t1.arrival_us) >= 0)
+    # every request's indices are in range for its (tenant-owned) table
+    metas = {m.table_id: m for m in t1.all_metas()}
+    for q, req in enumerate(t1.requests):
+        tname = t1.tenant_names[t1.tenant[q]]
+        owned = {m.table_id for m in t1.metas[tname]}
+        for tid, idx in req.items():
+            assert tid in owned
+            assert idx.min() >= 0 and idx.max() < metas[tid].num_rows
+    # chunks partition the trace in arrival order
+    seen = 0
+    for ch in t1.chunks(7):
+        assert ch.start == seen
+        seen += len(ch.requests)
+        np.testing.assert_array_equal(
+            ch.arrival_us, t1.arrival_us[ch.start:ch.start + len(ch.requests)])
+    assert seen == len(t1)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_trace_invariants_seeded(seed):
+    _check_trace_invariants(seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 1 << 16))
+def test_trace_invariants_property(seed):
+    _check_trace_invariants(seed)
+
+
+def test_archetype_grid_builds_and_differs():
+    """Every named archetype compiles to a valid trace, and archetypes
+    genuinely differ (not one trace under five names)."""
+    small = {name: build_trace(dataclasses.replace(s, num_queries=24))
+             for name, s in ARCHETYPES.items()}
+    assert len(small) >= 5
+    fingerprints = set()
+    for name, t in small.items():
+        assert len(t) == 24 and t.duration_us > 0
+        # arrival stream + per-query request content: same-rate Poisson
+        # archetypes share arrivals but must differ in what they ask for
+        req_sig = tuple(int(idx.sum()) for req in t.requests[:4]
+                        for idx in req.values())
+        fingerprints.add((tuple(np.round(t.arrival_us[:8], 3)), req_sig))
+    assert len(fingerprints) == len(small)
+    assert len(small["multi_tenant"].tenant_names) == 3
