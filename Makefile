@@ -1,7 +1,7 @@
 PYTHONPATH := src:.
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench-smoke docs-check check
+.PHONY: test test-fast bench-smoke bench-json docs-check check
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,7 +14,14 @@ test-fast:
 bench-smoke:
 	$(PY) benchmarks/run.py --only serve_batched
 	$(PY) benchmarks/run.py --only fig3_io
+	$(PY) -c "from benchmarks import perf_trace; perf_trace.run(num_queries=2000)"
 	$(PY) -c "from benchmarks import scenarios; scenarios.run(num_queries=64)"
+
+# machine-readable us/query for the serving hot paths -> BENCH_serve.json
+# (tracked perf trajectory: serve_batched, perf_trace, scenario sweep)
+bench-json:
+	$(PY) benchmarks/run.py --json BENCH_serve.json \
+		--only serve_batched,perf_trace,scenarios
 
 docs-check:
 	$(PY) tools/docs_check.py

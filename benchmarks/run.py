@@ -3,9 +3,16 @@
 
 Each module reproduces one paper table/figure; the roofline benchmark (slow:
 it compiles shallow-unrolled probes per cell) runs only with --roofline.
+
+``--json PATH`` additionally writes every executed suite's returned dict to
+a machine-readable JSON file (``make bench-json`` -> ``BENCH_serve.json``),
+so the serving-path perf trajectory (us/query for ``serve_batched``,
+``perf_trace`` and the scenario sweep) can be tracked across PRs.
 """
 import argparse
+import json
 import sys
+import time
 import traceback
 
 
@@ -13,17 +20,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--roofline", action="store_true",
                     help="also run the (slow) per-cell roofline probes")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names to run")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write executed suites' result dicts to PATH")
     args = ap.parse_args()
 
     from benchmarks import (depruning, fig1_skew, fig3_io, fig45_locality,
                             fig6_cache_org, interop_warmup, kernels,
-                            scenarios, serve_batched, table8_power,
-                            table9_scaleout, table11_multitenancy,
-                            table34_pooled)
+                            perf_trace, scenarios, serve_batched,
+                            table8_power, table9_scaleout,
+                            table11_multitenancy, table34_pooled)
 
     suites = [
         ("serve_batched", serve_batched.run),
+        ("perf_trace", perf_trace.run),
         ("fig1_skew", fig1_skew.run),
         ("fig3_io", fig3_io.run),
         ("fig45_locality", fig45_locality.run),
@@ -37,20 +48,31 @@ def main() -> None:
         ("interop_warmup", interop_warmup.run),
         ("kernels", kernels.run),
     ]
+    only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - {name for name, _ in suites}
+        if unknown:
+            raise SystemExit(f"unknown suite(s): {sorted(unknown)}")
     print("name,us_per_call,derived")
+    results = {}
     failed = 0
     for name, fn in suites:
-        if args.only and args.only != name:
+        if only and name not in only:
             continue
         try:
-            fn()
+            results[name] = fn()
         except Exception:  # noqa: BLE001
             failed += 1
             print(f"{name},0.00,ERROR", file=sys.stdout)
             traceback.print_exc()
     if args.roofline:
         from benchmarks import roofline
-        roofline.run()
+        results["roofline"] = roofline.run()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"generated_unix": int(time.time()),
+                       "results": results}, f, indent=2, default=str)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failed:
         raise SystemExit(1)
 

@@ -71,6 +71,7 @@ def run() -> dict:
         "seq_ms": round(min(seq_t) * 1e3, 2),
         "batch_ms": round(min(bat_t) * 1e3, 2),
         "speedup": round(speedup, 1),          # target: >= 10x
+        "us_per_query": round(min(bat_t) * 1e6 / (3 * QUERIES), 2),
         "device_max_err": dev_err,
     }
     emit("serve_batched", min(bat_t) * 1e6 / (3 * QUERIES),

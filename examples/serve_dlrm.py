@@ -16,7 +16,8 @@ Queries flow through two data planes and both are exercised here:
 The host-plane traffic comes from the workload engine: pick any archetype
 from ``repro.workloads.ARCHETYPES`` (steady Zipf, popularity drift, diurnal,
 MMPP-bursty, multi-tenant) and its trace — M1-statistics tables, timed
-arrivals — drives ``serve_batch`` in vectorized chunks.
+arrivals, stored columnar (CSR) — drives ``serve_columnar`` chunk by chunk
+through the vectorized data plane and admission ledger.
 
 Run: PYTHONPATH=src python examples/serve_dlrm.py \
          [--queries 128 --batch 32 --archetype zipf_steady]
@@ -80,11 +81,13 @@ def main():
     max_dev_err = 0.0
     done = 0
     for ch in trace.chunks(args.batch):
-        nb = len(ch.requests)
-        # SDM host plane: one batched pass for this trace chunk's user-table
-        # IO, admission ledger driven by the trace's arrival times
-        sched.serve_batch(ch.requests, bg_iops=10_000,
-                          arrivals_us=ch.arrival_us)
+        nb = len(ch.arrival_us)
+        # SDM host plane: the chunk's columnar (CSR) view goes straight
+        # through the vectorized data plane — per-table segment slices from
+        # the trace-level grouping, admission ledger retired vectorized at
+        # the trace's arrival times
+        sched.serve_columnar(ch.columnar, bg_iops=10_000,
+                             arrivals_us=ch.arrival_us, collect=False)
         # device plane: pooled user embeddings for the same nb queries
         u_idx = rng.integers(0, 50_000, (nb, n_user, arch.pooling))
         pooled, _ = engine.serve_batch(u_idx, bg_iops=10_000)

@@ -2,6 +2,7 @@
 embedding-dominated inference (scheduling, caches, IO, placement, power)."""
 from repro.core.cache import CacheGeometry, JaxRowCache, dual_cache_geometry, make_key  # noqa: F401
 from repro.core.cache_sim import BatchedRowCache, SetAssocSimCache, SimRowCache  # noqa: F401
+from repro.core.columnar import ColumnarChunk, ColumnarQueries, TableView  # noqa: F401
 from repro.core.io_sim import DEVICES, DeviceModel, IOEngine, IOQueueConfig, required_iops  # noqa: F401
 from repro.core.locality import TableMeta, sample_table_metas, zipf_indices  # noqa: F401
 from repro.core.placement import FM_DIRECT, SM_CACHED, SM_UNCACHED, PlacementConfig, assign  # noqa: F401

@@ -98,9 +98,12 @@ class SimRowCache:
 EMPTY_TAG = np.int64(-1)
 
 
-def make_row_keys(table_id: int, rows: np.ndarray) -> np.ndarray:
-    """Composite (table, row) -> int64 key shared by every host cache sim."""
-    return (np.int64(table_id) << np.int64(40)) | rows.astype(np.int64)
+def make_row_keys(table_id, rows: np.ndarray) -> np.ndarray:
+    """Composite (table, row) -> int64 key shared by every host cache sim.
+    ``table_id`` may be a scalar or an array aligned with ``rows`` (the
+    columnar plane builds all tables' keys in one call)."""
+    return (np.asarray(table_id).astype(np.int64) << np.int64(40)) \
+        | rows.astype(np.int64)
 
 
 def row_key_sets(keys: np.ndarray, num_sets: int) -> np.ndarray:
@@ -147,6 +150,11 @@ class BatchedRowCache:
         self.hits = 0
         self.misses = 0
         self.filled = 0          # resident rows (monotone until first eviction)
+        self.evictions = 0       # lines overwritten by fill() — while this is
+        #                          unchanged, residency and way placement are
+        #                          monotone (commit() never evicts), which the
+        #                          columnar plane's resident-chunk plan cache
+        #                          relies on
 
     # -- key / set hashing (module-level helpers, shared with SetAssocSimCache)
 
@@ -197,6 +205,7 @@ class BatchedRowCache:
                            self.stamp[ss].argmin(axis=1))
             was_empty = self.tags[ss, way] == EMPTY_TAG
             self.filled += int((~already & was_empty).sum())
+            self.evictions += int((~already & ~was_empty).sum())
             self.tags[ss, way] = kk
             self.stamp[ss, way] = self.clock
         # rows evicted to make room are simply overwritten (tags replaced)
@@ -228,6 +237,17 @@ class BatchedRowCache:
         key), plus the probe/fill way bookkeeping ``commit`` consumes.
         """
         uniq, inv = np.unique(keys, return_inverse=True)
+        return self.plan_from_unique(uniq, inv)
+
+    def plan_from_unique(self, uniq: np.ndarray, inv: np.ndarray):
+        """:meth:`batch_plan` with the key factorization precomputed.
+
+        ``uniq`` must be the sorted unique keys and ``inv`` the per-element
+        index into it (exactly ``np.unique(keys, return_inverse=True)``).
+        The columnar trace plane precomputes this factorization once per
+        (trace, chunk size) — it is state-independent — so the per-chunk
+        plan costs only the probe, not a sort.
+        """
         u_sets = self._sets(uniq)
         match = self.tags[u_sets] == uniq[:, None]           # [U, W]
         present = match.any(axis=1)
@@ -268,12 +288,13 @@ class BatchedRowCache:
         sets, way = plan["sets"], plan["way"]
         ev = np.zeros(len(used_ids), np.int64) if events is None else events
         stamp_vals = self.clock + 1 + ev
-        present = plan["present"][used_ids]
         self.stamp[sets[used_ids], way[used_ids]] = stamp_vals
-        new_ids = used_ids[~present]
-        if len(new_ids):
-            self.tags[sets[new_ids], way[new_ids]] = plan["uniq"][new_ids]
-            self.filled += len(new_ids)
+        if not plan.get("all_present"):     # resident-chunk plans never fill
+            present = plan["present"][used_ids]
+            new_ids = used_ids[~present]
+            if len(new_ids):
+                self.tags[sets[new_ids], way[new_ids]] = plan["uniq"][new_ids]
+                self.filled += len(new_ids)
         self.clock += 1 + (int(ev.max()) if len(ev) else 0)
 
     def make_keys(self, table_id: int, rows: np.ndarray) -> np.ndarray:

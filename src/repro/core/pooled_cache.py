@@ -20,6 +20,14 @@ def _splitmix(x: np.ndarray) -> np.ndarray:
     return x ^ (x >> np.uint64(31))
 
 
+def table_mix(table_id) -> np.ndarray:
+    """The table-id mixer every order-invariant hash xors in. Accepts a
+    scalar or an array of table ids (uint64 multiply wraps, intended)."""
+    with np.errstate(over="ignore"):
+        return np.asarray(table_id).astype(np.uint64) \
+            * np.uint64(0xD6E8FEB86659FD93)
+
+
 def order_invariant_hash(table_id: int, indices: np.ndarray) -> int:
     """Commutative 64-bit hash over the index multiset.
 
@@ -28,9 +36,7 @@ def order_invariant_hash(table_id: int, indices: np.ndarray) -> int:
     """
     x = _splitmix(indices.astype(np.uint64))
     h = np.uint64(np.sum(x, dtype=np.uint64))
-    with np.errstate(over="ignore"):
-        tmix = np.uint64(table_id) * np.uint64(0xD6E8FEB86659FD93)  # wraps (intended)
-    return int(h ^ tmix)
+    return int(h ^ table_mix(table_id))
 
 
 def order_invariant_hash_batch(table_id: int, cat_indices: np.ndarray,
@@ -45,9 +51,7 @@ def order_invariant_hash_batch(table_id: int, cat_indices: np.ndarray,
     x = _splitmix(cat_indices.astype(np.uint64))
     sums = np.add.reduceat(x, offsets.astype(np.intp)) if len(x) else \
         np.zeros(len(offsets), np.uint64)
-    with np.errstate(over="ignore"):
-        tmix = np.uint64(table_id) * np.uint64(0xD6E8FEB86659FD93)
-    return sums ^ tmix
+    return sums ^ table_mix(table_id)
 
 
 class PooledEmbeddingCache:

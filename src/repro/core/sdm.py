@@ -14,11 +14,14 @@ BatchedRowCache`: a whole request is probed with one vectorized tag compare
 and its unique misses become a single batched IO — the host-side mirror of
 the device cache (`cache.JaxRowCache` + the `cache_probe` Pallas kernel).
 
-``serve_query`` handles one query; ``serve_batch`` coalesces a list of
-queries, probing each table once across the whole batch and submitting the
-per-query IO counts through one vectorized ``IOEngine.submit_batch`` call.
-Both paths produce bit-identical ``QueryStats`` (serve_batch falls back to
-exact per-request processing whenever a cache eviction — whose order is
+``serve_query`` handles one query. ``serve_columnar`` is the batched data
+plane: it consumes a columnar (CSR) chunk — per-table segment views sliced
+from the trace-level grouping (``core/columnar.py``) — probes each table
+once across the whole batch, and submits the per-query IO counts through
+one coalesced ``IOEngine.submit_batch_multi`` call. ``serve_batch`` is the
+dict-of-arrays compatibility wrapper around it. All paths produce
+bit-identical ``QueryStats`` (the columnar path falls back to exact
+per-request processing whenever a cache eviction — whose order is
 arrival-dependent — would occur mid-batch).
 
 Latency accounting mirrors Eq. 3/4: user-side SM time is overlapped with
@@ -27,12 +30,13 @@ item-side FM compute and only the excess surfaces in query latency.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import placement as plc
 from repro.core.cache_sim import BatchedRowCache
+from repro.core.columnar import ColumnarChunk, ColumnarQueries, TableView
 from repro.core.io_sim import DeviceModel, IOEngine, IOQueueConfig
 from repro.core.locality import TableMeta, zipf_indices
 from repro.core.pooled_cache import (PooledEmbeddingCache,
@@ -82,10 +86,11 @@ class SDMEmbeddingStore:
         self.io = IOEngine(device, cfg.num_devices, cfg.io_queue)
         self.rng = np.random.default_rng(seed)
         self.stats = QueryStats()
-        self.batch_fallbacks = 0   # serve_batch dropped to the exact slow path
-        self._key_events: Optional[np.ndarray] = None  # serve_batch scratch
-        self._pooled_touch: list = []
-        self._io_req: list = []
+        self.batch_fallbacks = 0   # columnar path dropped to the exact slow path
+        self._pooled_touch: list = []  # pooled-LRU replay scratch
+        self._chunk_plans: Dict = {}   # resident-chunk plan cache (columnar)
+        self._key_events: Optional[np.ndarray] = None  # legacy dict-plane
+        self._io_req: list = []                        # scratch
         self._tpos: Dict = {}
         self._ev_width = 1
         # Tiny materialized payloads for numeric paths (tests/examples);
@@ -157,22 +162,298 @@ class SDMEmbeddingStore:
         self.stats.latency_us += q.latency_us
         return q
 
-    # -- batched query path ---------------------------------------------------
+    # -- batched (columnar) query path ----------------------------------------
+
+    def serve_columnar(self, chunk: ColumnarChunk, bg_iops: float = 0.0
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Serve a columnar (CSR) chunk — the vectorized data plane.
+
+        ``chunk`` carries per-table segment views sliced from the trace-level
+        grouping (one stable argsort per trace, see ``core/columnar.py``):
+        every cached table's pre-concatenated keys go through one row-cache
+        ``batch_plan``, pooled-cache hashes are precomputed slices, the
+        sequential-arrival event ranking comes straight from the CSR
+        query/position arrays, and one ``submit_batch_multi`` covers all
+        tables. Returns ``(sm_time_us [nq] f64, sm_ios [nq] i64)``.
+
+        Stats totals are bit-identical to calling :meth:`serve_query` on each
+        request in arrival order. Chunks that could evict (row or pooled
+        cache) before all probes complete fall back to exactly that
+        sequential path — the pre-flight plan mutates nothing, so the
+        fallback is exact (see ``batch_fallbacks``).
+        """
+        nq = chunk.n_queries
+        if nq == 0:
+            return np.zeros(0, np.float64), np.zeros(0, np.int64)
+        pc = self.pooled_cache
+        st = self.stats
+        views = chunk.table_views(with_hashes=pc is not None)
+        if not self._pooled_headroom(views):
+            return self._serve_fallback(chunk, bg_iops)
+
+        # Pre-flight row-cache plan over every cached table's keys (a
+        # superset of what the row phase will touch: pooled hits drop out
+        # later, which only makes the eviction guard conservative). This
+        # runs before the pooled probes so the eviction fallback still sees
+        # a completely untouched store. The sorted-unique/inverse
+        # factorization is state-independent and comes precomputed per
+        # (trace, chunk stride) when available.
+        cached = [v for v in views if self.placement[v.tid] == plc.SM_CACHED]
+        plan = None
+        plan_inv = None
+        fact = None
+        mark_fact = None
+        if any(len(v.keys) for v in cached):
+            ctids = tuple(t for t in chunk.table_ids.tolist()
+                          if self.placement[t] == plc.SM_CACHED)
+            fact = chunk.plan_factor(
+                ctids, lambda: np.concatenate([v.keys for v in cached]))
+            if fact is not None:
+                plan_inv = fact["inv"]
+                # resident-chunk plan cache: once this chunk has been served
+                # with every key resident afterwards, residency and way
+                # placement are monotone until the next eviction anywhere
+                # (``row_cache.evictions``) — replays skip the tag probe
+                lite = self._chunk_plans.get(id(fact))
+                if lite is not None and \
+                        lite[1] == self.row_cache.evictions:
+                    plan = lite[0]
+                else:
+                    plan = self.row_cache.plan_from_unique(fact["uniq"],
+                                                           plan_inv)
+                    mark_fact = fact
+            else:
+                plan = self.row_cache.batch_plan(
+                    np.concatenate([v.keys for v in cached]))
+                plan_inv = None if plan is None else plan["inv"]
+            if plan is None:     # an eviction would occur; nothing mutated yet
+                return self._serve_fallback(chunk, bg_iops)
+
+        # Phase A — pooled-cache probes per table (a Python segment loop
+        # only when the pooled cache exists; pure slicing otherwise).
+        # c_all: every cached view (its elements occupy the plan regardless
+        # of pooled hits); c_act / u_act: views with active segments.
+        self._pooled_touch = []
+        c_all = []
+        c_act = []
+        u_act = []
+        fills = []
+        for v in views:
+            place = self.placement[v.tid]
+            if place == plc.FM_DIRECT:
+                continue  # FM gather; no SM IO, no pooled participation
+            if pc is not None:
+                a_pos, keys_fill = self._pooled_probe(v)
+                active = a_pos is None or len(a_pos) > 0
+            else:
+                a_pos, keys_fill = None, None
+                active = len(v.qid) > 0
+            if place == plc.SM_CACHED:
+                c_all.append((v, a_pos, active))
+                if active:
+                    c_act.append((v, a_pos))
+            elif active:
+                u_act.append((v, a_pos))
+            if pc is not None and active:
+                fills.append((v, a_pos, keys_fill))
+
+        sm_lat = np.zeros(nq, np.float64)
+        ios_q = np.zeros(nq, np.int64)
+        io_aq, io_ios, io_rb = [], [], []
+
+        # Phase B — one global row-attribution pass across all cached
+        # tables: keys are unique per table, so per-key first/last touches
+        # resolve in (table, query)-ordered segment space without any
+        # per-table regrouping. A key is an SM IO only for the first segment
+        # that misses it; every later segment hits the just-filled line.
+        if c_act:
+            partial = any(a is not None and len(a) != len(v.qid)
+                          for v, a, _ in c_all)
+            seg_meta = None if (partial or fact is None) \
+                else fact.get("seg")
+            if seg_meta is None:
+                aq_c = np.concatenate([v.qid if a is None else v.qid[a]
+                                       for v, a in c_act])
+                lens_c = np.concatenate([v.lens if a is None else v.lens[a]
+                                         for v, a in c_act])
+                tpos_c = np.concatenate([v.tpos if a is None else v.tpos[a]
+                                         for v, a in c_act])
+                seg_id = np.repeat(np.arange(len(aq_c), dtype=np.int64),
+                                   lens_c)
+                ev_width = 1 + chunk.max_segs
+                if not partial and fact is not None:
+                    # chunk-constant (state-independent): cache for replays
+                    fact["seg"] = (aq_c, lens_c, tpos_c, seg_id, ev_width)
+            else:
+                aq_c, lens_c, tpos_c, seg_id, ev_width = seg_meta
+            if partial:
+                keep = []
+                for v, a, _ in c_all:
+                    if a is None:
+                        keep.append(np.ones(len(v.keys), bool))
+                    elif len(a) == len(v.qid):
+                        keep.append(np.ones(len(v.keys), bool))
+                    else:
+                        m = np.zeros(len(v.qid), bool)
+                        m[a] = True
+                        keep.append(np.repeat(m, v.lens))
+                inv_k = plan_inv[np.concatenate(keep)]
+            elif plan_inv is not None:
+                inv_k = plan_inv
+            else:                   # cached tables whose requests are empty
+                inv_k = np.zeros(0, np.int64)
+            ek = len(inv_k)
+            ns = len(aq_c)
+            ids = np.zeros(0, np.int64)
+            events = np.zeros(0, np.int64)
+            tot_c_ios = 0
+            if ek:
+                # sequential-arrival event ranking: (query, table position
+                # within the query, probe-vs-fill). Row-cache stamps and the
+                # pooled LRU order are replayed in this order after the
+                # batch, so the state left behind is exactly what a
+                # sequential run would leave.
+                u = len(plan["uniq"])
+                # scatter: duplicate indices -> last write wins, and seg_id
+                # is nondecreasing, so these are per-key first/last touches
+                last = np.empty(u, np.int64)
+                last[inv_k] = seg_id
+                if partial:
+                    used = np.zeros(u, bool)
+                    used[inv_k] = True
+                    ids = np.nonzero(used)[0]
+                else:       # every unique key appears in inv_k
+                    used = None
+                    ids = np.arange(u, dtype=np.int64)
+                all_hit = plan.get("all_present", False)
+                if not all_hit:
+                    pk = plan["present"][inv_k]
+                    all_hit = bool(pk.all())
+                if all_hit:
+                    # warm steady state: every element hits, nothing fills —
+                    # the miss attribution collapses away (same values)
+                    nh = ek
+                    ios_seg = np.zeros(ns, np.int64)
+                    events = (aq_c[last[ids]] * ev_width
+                              + tpos_c[last[ids]]) * 2
+                else:
+                    present = plan["present"]
+                    first = np.empty(u, np.int64)
+                    first[inv_k[::-1]] = seg_id[::-1]
+                    elem_hit = pk | (seg_id > first[inv_k])
+                    nh = int(elem_hit.sum())
+                    miss = ~present if used is None else used & ~present
+                    ios_seg = np.bincount(first[miss], minlength=ns)
+                    tot_c_ios = int(ios_seg.sum())
+                    fill_last = miss & (last == first)
+                    events = ((aq_c[last[ids]] * ev_width
+                               + tpos_c[last[ids]]) * 2 + fill_last[ids])
+                st.row_lookups += ek
+                st.row_hits += nh
+                self.row_cache.hits += nh
+                self.row_cache.misses += ek - nh
+            else:
+                ios_seg = np.zeros(ns, np.int64)
+            st.sm_ios += tot_c_ios
+            if tot_c_ios:       # all-hit chunks contribute no IO anywhere
+                s0 = 0
+                for v, a in c_act:
+                    na = len(v.qid) if a is None else len(a)
+                    aq_t = aq_c[s0:s0 + na]
+                    ios_t = ios_seg[s0:s0 + na]
+                    s0 += na
+                    ios_q[aq_t] += ios_t    # aq is unique per table: plain
+                    io_aq.append(aq_t)      # fancy indexing works
+                    io_ios.append(ios_t)
+                    io_rb.append(np.full(na, self.metas[v.tid].dim_bytes,
+                                         np.int64))
+        for v, a in u_act:              # SM_UNCACHED: every lookup is an IO
+            aq_t = v.qid if a is None else v.qid[a]
+            ios_t = v.lens if a is None else v.lens[a]
+            st.sm_ios += int(ios_t.sum())
+            ios_q[aq_t] += ios_t
+            io_aq.append(aq_t)
+            io_ios.append(ios_t)
+            io_rb.append(np.full(len(aq_t), self.metas[v.tid].dim_bytes,
+                                 np.int64))
+
+        # IO is coalesced across tables too: one submit_batch_multi covers
+        # the whole chunk (latency is per-request, independent of grouping)
+        if io_aq:
+            lats, _ = self.io.submit_batch_multi(
+                np.concatenate(io_ios), np.concatenate(io_rb), bg_iops)
+            np.maximum.at(sm_lat, np.concatenate(io_aq), lats)
+        if plan is not None:
+            if c_act:
+                self.row_cache.commit(plan, ids, events)
+            else:
+                self.row_cache.commit(plan, np.zeros(0, np.int64),
+                                      np.zeros(0, np.int64))
+            if mark_fact is not None and (
+                    pc is None or bool(plan["present"].all())):
+                # every key of this chunk is now resident (pooled off: all
+                # keys were used and committed; else nothing was absent), so
+                # replays can skip the tag probe until the next eviction
+                if len(self._chunk_plans) > 4096:
+                    self._chunk_plans.clear()
+                self._chunk_plans[id(mark_fact)] = (
+                    {"uniq": plan["uniq"], "sets": plan["sets"],
+                     "way": plan["way"], "all_present": True},
+                    self.row_cache.evictions, mark_fact)
+
+        # Phase C — pooled-cache fills (+ pooled vectors when payloads are
+        # materialized), then the pooled LRU replay in arrival order
+        for v, a_pos, keys_fill in fills:
+            self._pooled_fill(v, a_pos, keys_fill)
+        if pc is not None and self._pooled_touch:
+            store = pc.store
+            for _, _, k in sorted(self._pooled_touch):
+                if k in store:
+                    store.move_to_end(k)
+        self._pooled_touch = []
+
+        # latency accounting in sequential arrival order (float addition is
+        # not associative; the running sum must match serve_query's)
+        acc = self.stats.latency_us
+        item = self.cfg.item_time_us
+        for t in sm_lat.tolist():
+            acc += t if t > item else item
+        self.stats.latency_us = acc
+        return sm_lat, ios_q
 
     def serve_batch(self, requests_list: Sequence[Dict[int, np.ndarray]],
                     bg_iops: float = 0.0) -> List[QueryStats]:
-        """Serve a batch of queries, coalescing work across queries *and*
-        tables: every cached table's indices across the whole batch go
-        through one row-cache probe plan, per-query IO counts go through one
-        vectorized ``submit_batch`` per table, and pooled-cache keys are
-        hashed in one vectorized pass per table.
+        """Dict-of-arrays compatibility wrapper: converts the batch to
+        columnar form and serves it through :meth:`serve_columnar`.
+        Bit-identical to calling :meth:`serve_query` per request in order."""
+        nq = len(requests_list)
+        if nq == 0:
+            return []
+        chunk = ColumnarQueries.from_requests(requests_list).whole()
+        sm_lat, ios_q = self.serve_columnar(chunk, bg_iops)
+        item = self.cfg.item_time_us
+        out = []
+        for q in range(nq):
+            t = float(sm_lat[q])
+            out.append(QueryStats(latency_us=max(item, t),
+                                  sm_ios=int(ios_q[q]), sm_time_us=t))
+        return out
 
-        Stats totals are bit-identical to calling :meth:`serve_query` on each
-        request in order. Batches that could evict (row or pooled cache)
-        before all probes complete fall back to exactly that sequential path
-        — the pre-flight plan mutates nothing, so the fallback is exact (see
-        ``batch_fallbacks``).
-        """
+    # -- legacy dict-of-arrays data plane --------------------------------------
+    #
+    # The pre-columnar batched implementation, kept verbatim: it re-derives
+    # per-table groupings from the request dicts with O(batch x tables)
+    # Python loops on every call. It serves two purposes: (a) the baseline
+    # ``benchmarks/perf_trace.py`` times the columnar plane against, and
+    # (b) a third, independently-implemented oracle for the differential
+    # test suites (sequential serve_query == serve_batch_dict ==
+    # serve_columnar, bit for bit).
+
+    def serve_batch_dict(self, requests_list: Sequence[Dict[int, np.ndarray]],
+                         bg_iops: float = 0.0) -> List[QueryStats]:
+        """Serve a batch of query dicts through the legacy dict plane.
+        Bit-identical to :meth:`serve_query` per request in order (and so to
+        :meth:`serve_columnar` on the same queries)."""
         nq = len(requests_list)
         if nq == 0:
             return []
@@ -185,13 +466,11 @@ class SDMEmbeddingStore:
             all_idx = [np.asarray(requests_list[q][tid]) for q in qids]
             lens = np.array([len(i) for i in all_idx], np.int64)
             per_table[tid] = (qids, all_idx, lens)
-        if not self._pooled_headroom(per_table):
+        if not self._pooled_headroom_dict(per_table):
             self.batch_fallbacks += 1
             return [self.serve_query(r, bg_iops) for r in requests_list]
 
-        # Pre-flight row-cache plan over every cached table's keys (a
-        # superset of what the row phase will touch: pooled hits drop out
-        # later, which only makes the eviction guard conservative).
+        # pre-flight row-cache plan over every cached table's keys
         spans = {}
         key_parts = []
         ofs = 0
@@ -213,10 +492,8 @@ class SDMEmbeddingStore:
                 return [self.serve_query(r, bg_iops) for r in requests_list]
             self._key_events = np.full(len(plan["uniq"]), -1, np.int64)
 
-        # sequential-arrival event ranking: (query, table position within the
-        # query, probe-vs-fill). Row-cache stamps and the pooled-cache LRU
-        # order are replayed in this order after the batch, so the state left
-        # behind is exactly what a sequential run would leave.
+        # sequential-arrival event ranking: (query, table position within
+        # the query, probe-vs-fill)
         self._tpos = {(q, tid): p for q, req in enumerate(requests_list)
                       for p, tid in enumerate(req)}
         self._ev_width = 1 + max(len(req) for req in requests_list)
@@ -226,8 +503,8 @@ class SDMEmbeddingStore:
         sm_lat = np.zeros(nq, np.float64)
         ios_q = np.zeros(nq, np.int64)
         for tid in table_order:
-            self._serve_table_batch(tid, per_table[tid], plan,
-                                    spans.get(tid), sm_lat, ios_q)
+            self._serve_table_dict(tid, per_table[tid], plan,
+                                   spans.get(tid), sm_lat, ios_q)
         if self._io_req:
             cat_aq = np.concatenate([r[0] for r in self._io_req])
             cat_ios = np.concatenate([r[1] for r in self._io_req])
@@ -255,9 +532,7 @@ class SDMEmbeddingStore:
             out.append(qs)
         return out
 
-    def _pooled_headroom(self, per_table) -> bool:
-        """True when the pooled cache cannot evict during this batch (so the
-        per-table processing order is exactly equivalent to arrival order)."""
+    def _pooled_headroom_dict(self, per_table) -> bool:
         if self.pooled_cache is None:
             return True
         thr = self.pooled_cache.len_threshold
@@ -269,8 +544,8 @@ class SDMEmbeddingStore:
             worst += int((lens > thr).sum()) * (dim * 4 + 24)
         return self.pooled_cache.used + worst <= self.pooled_cache.capacity
 
-    def _serve_table_batch(self, tid: int, table_data, plan, span,
-                           sm_lat: np.ndarray, ios_q: np.ndarray) -> None:
+    def _serve_table_dict(self, tid: int, table_data, plan, span,
+                          sm_lat: np.ndarray, ios_q: np.ndarray) -> None:
         qids, all_idx, all_lens = table_data
         m = self.metas[tid]
         place = self.placement[tid]
@@ -278,9 +553,7 @@ class SDMEmbeddingStore:
         if place == plc.FM_DIRECT:
             return  # FM gather; no SM IO, no pooled participation
 
-        # pooled-cache probe, in arrival order (hashes vectorized across the
-        # batch; a request whose key an earlier batch request will fill is a
-        # "pending hit", exactly as it would hit sequentially)
+        # pooled-cache probe, in arrival order
         active: List[int] = []          # query id per active request
         a_pos: List[int] = []           # position among this table's requests
         idxs: List[np.ndarray] = []
@@ -294,7 +567,7 @@ class SDMEmbeddingStore:
                 tid, np.concatenate(all_idx) if len(all_idx) else
                 np.zeros(0, np.int64), offs)
             pending = set()
-            hlist = hashes.tolist()        # python ints: cheap loop below
+            hlist = hashes.tolist()
             llist = all_lens.tolist()
             thr = pc.len_threshold
             for i, q in enumerate(qids):
@@ -304,10 +577,10 @@ class SDMEmbeddingStore:
                     active.append(q)
                     a_pos.append(i)
                     idxs.append(all_idx[i])
-                    keys.append(None)      # below threshold: no pooled fill
+                    keys.append(None)
                     continue
                 k = hlist[i]
-                if k in pending:               # a pending key is never in store
+                if k in pending:
                     pc.note_pending_hit(llist[i])
                     st.pooled_hits += 1
                     self._pooled_touch.append((q, self._tpos[(q, tid)], k))
@@ -331,12 +604,8 @@ class SDMEmbeddingStore:
         na = len(active)
         lens = all_lens[a_pos]
         if place == plc.SM_CACHED and int(lens.sum()) == 0:
-            ios = np.zeros(na, np.int64)   # all-empty requests: no row work
+            ios = np.zeros(na, np.int64)
         elif place == plc.SM_CACHED:
-            # slice this table's elements out of the global plan, drop the
-            # pooled-hit requests, and attribute hits/IOs per request: a key
-            # is an SM IO only for the first request that misses it; every
-            # later request hits the just-filled line.
             inv_sub = plan["inv"][span[0]:span[1]]
             if na != len(qids):
                 active_mask = np.zeros(len(qids), bool)
@@ -344,7 +613,7 @@ class SDMEmbeddingStore:
                 inv_sub = inv_sub[np.repeat(active_mask, all_lens)]
             labels = np.repeat(np.arange(na, dtype=np.int64), lens)
             ids, first_pos = np.unique(inv_sub, return_index=True)
-            first_lab = labels[first_pos]   # labels are nondecreasing
+            first_lab = labels[first_pos]
             present = plan["present"]
             loc = np.searchsorted(ids, inv_sub)
             elem_hit = present[inv_sub] | (labels > first_lab[loc])
@@ -355,12 +624,8 @@ class SDMEmbeddingStore:
             self.row_cache.misses += len(inv_sub) - nh
             miss = ~present[ids]
             ios = np.bincount(first_lab[miss], minlength=na)
-            # each key's last touch, ranked in sequential arrival order: a
-            # line missed once is stamped at its filling request's fill tick,
-            # anything re-hit at its last prober's probe tick
             last_lab = np.zeros(len(ids), np.int64)
-            last_lab[loc] = labels      # duplicate indices: last write wins,
-            #                             and labels are nondecreasing -> max
+            last_lab[loc] = labels
             fill_last = miss & (last_lab == first_lab)
             aq = np.asarray(active)
             tpos = np.array([self._tpos[(q, tid)] for q in active], np.int64)
@@ -370,10 +635,7 @@ class SDMEmbeddingStore:
             ios = lens
         st.sm_ios += int(ios.sum())
 
-        # IO is coalesced across tables too: one submit_batch_multi covers
-        # the whole batch after the table loop (latency is per-request,
-        # independent of submission grouping)
-        aq = np.asarray(active)          # unique -> plain fancy indexing works
+        aq = np.asarray(active)
         self._io_req.append((aq, ios, m.dim_bytes))
         ios_q[aq] += ios
 
@@ -392,6 +654,104 @@ class SDMEmbeddingStore:
                         self.pooled_cache.insert_hashed(k, vecs[i])
         elif self.pooled_cache is not None:
             for k in keys:
+                if k is not None:
+                    self.pooled_cache.insert_hashed(k, np.zeros(1, np.float32))
+
+    def _serve_fallback(self, chunk: ColumnarChunk, bg_iops: float
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact sequential path for eviction-bound chunks (nothing has been
+        mutated when this is taken, so it is bit-exact)."""
+        self.batch_fallbacks += 1
+        stats = [self.serve_query(r, bg_iops) for r in chunk.requests()]
+        return (np.array([s.sm_time_us for s in stats], np.float64),
+                np.array([s.sm_ios for s in stats], np.int64))
+
+    def _pooled_headroom(self, views: Sequence[TableView]) -> bool:
+        """True when the pooled cache cannot evict during this chunk (so the
+        per-table processing order is exactly equivalent to arrival order)."""
+        if self.pooled_cache is None:
+            return True
+        thr = self.pooled_cache.len_threshold
+        worst = 0
+        for v in views:
+            if self.placement[v.tid] == plc.FM_DIRECT:
+                continue
+            cnt = int((v.lens > thr).sum())
+            if cnt:
+                dim = (self.payloads[v.tid].shape[1]
+                       if v.tid in self.payloads else 1)
+                worst += cnt * (dim * 4 + 24)
+        return self.pooled_cache.used + worst <= self.pooled_cache.capacity
+
+    def _pooled_probe(self, v: TableView):
+        """Pooled-cache probe for one table's chunk segments, in arrival
+        order (hashes are precomputed trace slices; a request whose key an
+        earlier chunk request will fill is a "pending hit", exactly as it
+        would hit sequentially). Returns ``(a_pos, keys_fill)``: the active
+        (missed / below-threshold) segment positions — ``None`` when every
+        segment stays active — and the pooled key to fill per active
+        segment (``None`` entries are below ``LenThreshold``)."""
+        pc = self.pooled_cache
+        st = self.stats
+        thr = pc.len_threshold
+        nseg = len(v.qid)
+        hlist = v.hashes.tolist()          # python ints: cheap loop below
+        llist = v.lens.tolist()
+        qlist = v.qid.tolist()
+        plist = v.tpos.tolist()
+        touch = self._pooled_touch
+        pending = set()
+        act: List[int] = []                # position among this table's segs
+        keys_fill: List[Optional[int]] = []
+        for i in range(nseg):
+            st.pooled_lookups += 1
+            ln = llist[i]
+            if ln <= thr:
+                pc.skipped += 1
+                act.append(i)
+                keys_fill.append(None)     # below threshold: no pooled fill
+                continue
+            k = hlist[i]
+            if k in pending:               # a pending key is never in store
+                pc.note_pending_hit(ln)
+                st.pooled_hits += 1
+                touch.append((qlist[i], plist[i], k))
+            elif pc.lookup_hashed(k, ln) is not None:
+                st.pooled_hits += 1
+                touch.append((qlist[i], plist[i], k))
+            else:
+                pending.add(k)
+                act.append(i)
+                keys_fill.append(k)
+                touch.append((qlist[i], plist[i], k))
+        if len(act) == nseg:
+            return None, keys_fill
+        return np.asarray(act, np.int64), keys_fill
+
+    def _pooled_fill(self, v: TableView, a_pos: Optional[np.ndarray],
+                     keys_fill: List[Optional[int]]) -> None:
+        """Insert the pooled vectors (real when payloads are materialized,
+        metadata-only otherwise) for one table's active segments."""
+        if v.tid in self.payloads:
+            tbl = self.payloads[v.tid]
+            if a_pos is None:
+                cat, lens, na = v.vals, v.lens, len(v.qid)
+            else:
+                mask = np.zeros(len(v.qid), bool)
+                mask[a_pos] = True
+                cat = v.vals[np.repeat(mask, v.lens)]
+                lens = v.lens[a_pos]
+                na = len(a_pos)
+            offs = np.zeros(na, np.int64)
+            np.cumsum(lens[:-1], out=offs[1:])
+            np.minimum(offs, max(cat.size - 1, 0), out=offs)
+            vecs = (np.add.reduceat(tbl[cat % tbl.shape[0]], offs, axis=0)
+                    if cat.size else np.zeros((na, tbl.shape[1]), np.float32))
+            for i, k in enumerate(keys_fill):
+                if k is not None:
+                    self.pooled_cache.insert_hashed(k, vecs[i])
+        else:
+            for k in keys_fill:
                 if k is not None:
                     self.pooled_cache.insert_hashed(k, np.zeros(1, np.float32))
 

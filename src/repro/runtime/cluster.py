@@ -23,6 +23,7 @@ replays the trace with that load applied (``passes=2``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -82,6 +83,7 @@ class HostReport:
     iops_occupancy: float                  # vs device envelope (0 for DRAM)
     feasible_qps: float                    # simulation-level Eq. 5
     power: float                           # normalized host power
+    batch_fallbacks: int = 0               # exact-sequential chunk fallbacks
 
 
 @dataclasses.dataclass
@@ -142,10 +144,65 @@ class HostSim:
         self.sched = ServeScheduler(self.store, ServeConfig(
             item_compute_us=item_us, latency_target_us=latency_target_us))
 
-    def run_trace(self, trace: Trace, chunk: int, bg_iops: float) -> None:
+    def run_trace(self, trace: Trace, chunk: int, bg_iops: float,
+                  columnar: bool = True) -> None:
+        """Replay a trace. The columnar path slices the trace's cached
+        per-table grouping per chunk (so warmup + multi-pass replays pay the
+        argsort once); ``columnar=False`` replays through the legacy dict
+        plane (per-chunk Python grouping, per-query ledger) for differential
+        testing and the ``benchmarks/perf_trace.py`` baseline."""
+        if columnar:
+            self.sched.serve_trace(trace, chunk, bg_iops)
+            return
         for ch in trace.chunks(chunk):
-            self.sched.serve_batch(ch.requests, bg_iops,
-                                   arrivals_us=ch.arrival_us)
+            self.sched.serve_batch_dict(ch.requests, bg_iops,
+                                        arrivals_us=ch.arrival_us)
+
+    def snapshot(self) -> dict:
+        """Copy of the store's serving state (row/pooled caches, IO
+        counters, stats). The data-plane state a trace replay leaves behind
+        is independent of the device background load — bg only enters
+        latency — so the pass-1 post-warmup snapshot is bit-identical to
+        what pass 2's warmup would recompute, and ``ClusterSim.run`` reuses
+        it instead of replaying the warmup on every self-consistency pass."""
+        s = self.store
+        rc = s.row_cache
+        snap = {
+            "tags": rc.tags.copy(), "stamp": rc.stamp.copy(),
+            "clock": rc.clock, "hits": rc.hits, "misses": rc.misses,
+            "filled": rc.filled, "evictions": rc.evictions,
+            "stats": dataclasses.replace(s.stats),
+            "fallbacks": s.batch_fallbacks,
+            "chunk_plans": dict(s._chunk_plans),
+            "io": (s.io.total_ios, s.io.total_bus_bytes,
+                   s.io.total_wanted_bytes),
+        }
+        if s.pooled_cache is not None:
+            pc = s.pooled_cache
+            snap["pooled"] = (dict(pc.store), pc.used, pc.hits, pc.misses,
+                              pc.skipped, pc.hit_len_sum)
+        return snap
+
+    def restore(self, snap: dict) -> None:
+        """Restore a :meth:`snapshot` (see there for the exactness
+        argument)."""
+        s = self.store
+        rc = s.row_cache
+        rc.tags = snap["tags"].copy()
+        rc.stamp = snap["stamp"].copy()
+        rc.clock, rc.hits, rc.misses, rc.filled = (
+            snap["clock"], snap["hits"], snap["misses"], snap["filled"])
+        rc.evictions = snap["evictions"]
+        s.stats = dataclasses.replace(snap["stats"])
+        s.batch_fallbacks = snap["fallbacks"]
+        s._chunk_plans = dict(snap["chunk_plans"])
+        s.io.total_ios, s.io.total_bus_bytes, s.io.total_wanted_bytes = \
+            snap["io"]
+        if s.pooled_cache is not None:
+            pc = s.pooled_cache
+            store, pc.used, pc.hits, pc.misses, pc.skipped, pc.hit_len_sum = \
+                snap["pooled"]
+            pc.store = collections.OrderedDict(store)
 
     def reset_measurement(self) -> None:
         """Zero the accumulated stats but keep all cache state — the next
@@ -153,6 +210,7 @@ class HostSim:
         paper's cache-hit-rate numbers (96% M1, 90% M2) refer to."""
         self.store.stats = QueryStats()
         self.store.row_cache.hits = self.store.row_cache.misses = 0
+        self.store.batch_fallbacks = 0
         if self.store.pooled_cache is not None:
             self.store.pooled_cache.hits = self.store.pooled_cache.misses = 0
         self.sched = ServeScheduler(self.store, self.sched.cfg)
@@ -187,7 +245,8 @@ class HostSim:
             p50_us=self.sched.percentile(50), p95_us=self.sched.percentile(95),
             p99_us=self.sched.percentile(99), deferred=self.sched.deferred,
             sm_ios=ios, achieved_iops=iops, iops_occupancy=occ,
-            feasible_qps=feasible, power=spec.host.power)
+            feasible_qps=feasible, power=spec.host.power,
+            batch_fallbacks=self.store.batch_fallbacks)
 
 
 class ClusterSim:
@@ -222,21 +281,26 @@ class ClusterSim:
     # -- simulation -----------------------------------------------------------
 
     def run(self, trace: Trace, *, passes: int = 1, warmup: bool = False,
-            bg_iops: Optional[Dict[str, float]] = None) -> ClusterReport:
+            bg_iops: Optional[Dict[str, float]] = None,
+            columnar: bool = True) -> ClusterReport:
         """Simulate the trace. ``passes=2`` makes the device background load
         self-consistent (pass 1 measures per-host IOPS, pass 2 replays with
         that load). ``warmup`` replays the trace once before measuring, so
         hit rates and feasible QPS reflect the steady-state (warm-cache)
         regime. ``bg_iops`` is per-host *external* background load (other
         tenants, maintenance IO); measurement passes add the host's own
-        measured IOPS on top of it."""
+        measured IOPS on top of it. ``columnar`` selects the CSR fast path
+        (bit-identical to the dict path; route-split subsets are built once,
+        so every warmup/pass replay reuses each subset's cached grouping)."""
         assign = self.route(trace)
         metas = trace.all_metas()
         subsets = [trace.subset(assign == h) for h in range(len(self.specs))]
         ext = dict(bg_iops or {})
         bg = dict(ext)
         sims: List[Optional[HostSim]] = []
-        for p in range(max(1, passes)):
+        warm_snaps: List[Optional[dict]] = [None] * len(self.specs)
+        n_passes = max(1, passes)
+        for p in range(n_passes):
             sims = []
             for h, spec in enumerate(self.specs):
                 if not len(subsets[h]):
@@ -245,11 +309,18 @@ class ClusterSim:
                 sim = HostSim(spec, metas, self.cfg.latency_target_us,
                               seed=self.cfg.seed)
                 if warmup:
-                    sim.run_trace(subsets[h], self.cfg.chunk,
-                                  bg.get(spec.name, 0.0))
+                    # warmup leaves bg-independent state: later passes
+                    # restore the pass-1 snapshot instead of replaying
+                    if warm_snaps[h] is not None:
+                        sim.restore(warm_snaps[h])
+                    else:
+                        sim.run_trace(subsets[h], self.cfg.chunk,
+                                      bg.get(spec.name, 0.0), columnar)
+                        if columnar and n_passes > 1:
+                            warm_snaps[h] = sim.snapshot()
                     sim.reset_measurement()
                 sim.run_trace(subsets[h], self.cfg.chunk,
-                              bg.get(spec.name, 0.0))
+                              bg.get(spec.name, 0.0), columnar)
                 sims.append(sim)
             if p < passes - 1:    # feed measured IOPS into the next pass
                 bg = {s.spec.name: ext.get(s.spec.name, 0.0)

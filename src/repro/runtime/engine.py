@@ -17,14 +17,15 @@ row cache (``JaxRowCache``), and one jitted step serves a whole
 
 The pooled output is the hit-side pool (from cache data) plus the miss-side
 pool (from the backing store). IO accounting happens host-side through the
-same analytic ``IOEngine`` the host store uses: per-table miss counts become
-one vectorized ``submit_batch`` each, giving per-query latencies under Eq. 3
-overlap. On CPU the kernels run in interpret mode; on TPU they compile.
+same analytic ``IOEngine`` the host store uses: the whole ``[batch, tables]``
+miss-count block goes through one coalesced ``submit_batch_multi`` call,
+giving per-query latencies under Eq. 3 overlap. On CPU the kernels run in
+interpret mode; on TPU they compile.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +58,10 @@ class DeviceServingEngine:
     """
 
     def __init__(self, tables: Dict[int, np.ndarray], device: DeviceModel,
-                 cfg: EngineConfig = EngineConfig()):
+                 cfg: Optional[EngineConfig] = None):
+        # None sentinel: a dataclass default instance here would be shared
+        # (and mutable) across every engine constructed without a config
+        cfg = EngineConfig() if cfg is None else cfg
         if not tables:
             raise ValueError("need at least one table")
         dims = {t.shape[1] for t in tables.values()}
@@ -135,10 +139,12 @@ class DeviceServingEngine:
         state, pooled, miss = self._step(self.state, jnp.asarray(idx))
         self.state = state
         miss = np.asarray(miss)                              # [B, T]
-        sm_lat = np.zeros(miss.shape[0], np.float64)
-        for t in range(miss.shape[1]):
-            lats, _ = self.io.submit_batch(miss[:, t], self.row_bytes, bg_iops)
-            np.maximum(sm_lat, lats, out=sm_lat)
+        # one coalesced submission across all (query, table) pairs — the
+        # same cross-table flattening the host plane uses; per-element
+        # latency is identical to per-table submit_batch calls
+        rb = np.full(miss.size, self.row_bytes, np.int64)
+        lats, _ = self.io.submit_batch_multi(miss.reshape(-1), rb, bg_iops)
+        sm_lat = lats.reshape(miss.shape).max(axis=1)
         stats = [QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat[b]),
                             sm_ios=int(miss[b].sum()),
                             sm_time_us=float(sm_lat[b]))

@@ -15,10 +15,16 @@ events that have landed by a query's arrival drain the in-flight counter
 first. Time is simulated from the analytic device model — the same code path
 a real host would drive with actual completions.
 
-``serve`` handles one query; ``serve_batch`` pushes a whole batch through the
-vectorized ``SDMEmbeddingStore.serve_batch`` data plane and then walks the
-queries through the same admission ledger in arrival order, so both paths
-yield identical results.
+``serve`` handles one query; ``serve_columnar`` pushes a columnar (CSR)
+chunk through the vectorized ``SDMEmbeddingStore.serve_columnar`` data plane
+and then retires the admission ledger *vectorized per chunk*: pending
+completion events live in a sorted array, one ``searchsorted`` per chunk
+finds how many have landed by each arrival, and the whole chunk commits at
+once when no query would be deferred (the rare saturated chunk replays
+through the exact per-query ledger — nothing has been mutated at that
+point). ``serve_trace`` drives a whole trace through it chunk by chunk;
+``serve_batch`` is the dict-of-arrays wrapper. All paths yield identical
+results, bit for bit.
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.columnar import ColumnarChunk
 from repro.core.sdm import QueryStats, SDMEmbeddingStore
 
 
@@ -124,6 +131,145 @@ class ServeScheduler:
         if arrivals_us is None:
             return [self._admit(qs) for qs in stats]
         return [self._admit(qs, at) for qs, at in zip(stats, arrivals_us)]
+
+    def serve_batch_dict(self, requests_list: Sequence[Dict[int, np.ndarray]],
+                         bg_iops: float = 0.0,
+                         arrivals_us: Optional[Sequence[float]] = None
+                         ) -> List[QueryResult]:
+        """:meth:`serve_batch` through the legacy dict data plane
+        (``SDMEmbeddingStore.serve_batch_dict``) with the per-query ledger —
+        the pre-columnar serving path, kept as the perf baseline and as an
+        independent differential oracle. Results are bit-identical to every
+        other path."""
+        if arrivals_us is not None and len(arrivals_us) != len(requests_list):
+            raise ValueError(
+                f"arrivals_us has {len(arrivals_us)} entries for "
+                f"{len(requests_list)} requests")
+        stats = self.store.serve_batch_dict(requests_list, bg_iops)
+        if arrivals_us is None:
+            return [self._admit(qs) for qs in stats]
+        return [self._admit(qs, at) for qs, at in zip(stats, arrivals_us)]
+
+    def serve_columnar(self, chunk: ColumnarChunk, bg_iops: float = 0.0,
+                       arrivals_us: Optional[np.ndarray] = None,
+                       collect: bool = True) -> Optional[List[QueryResult]]:
+        """Columnar fast path: the CSR chunk goes through
+        ``SDMEmbeddingStore.serve_columnar`` and the admission ledger retires
+        vectorized (:meth:`_admit_chunk`). Identical results to
+        :meth:`serve_batch` on the chunk's dict view; ``collect=False``
+        skips building the per-query ``QueryResult`` list."""
+        if arrivals_us is not None and len(arrivals_us) != chunk.n_queries:
+            raise ValueError(
+                f"arrivals_us has {len(arrivals_us)} entries for "
+                f"{chunk.n_queries} requests")
+        sm_time, sm_ios = self.store.serve_columnar(chunk, bg_iops)
+        return self._admit_chunk(sm_time, sm_ios, arrivals_us, collect)
+
+    def serve_trace(self, trace, chunk: int = 32, bg_iops: float = 0.0,
+                    collect: bool = False) -> Optional[List[QueryResult]]:
+        """Serve a whole :class:`~repro.workloads.trace.Trace` through the
+        columnar plane in arrival-order chunks (the trace-level per-table
+        grouping is computed once and sliced per chunk)."""
+        out: Optional[List[QueryResult]] = [] if collect else None
+        for ch in trace.chunks(chunk):
+            res = self.serve_columnar(ch.columnar, bg_iops,
+                                      arrivals_us=ch.arrival_us,
+                                      collect=collect)
+            if collect:
+                out.extend(res)
+        return out
+
+    def _admit_chunk(self, sm_time: np.ndarray, sm_ios: np.ndarray,
+                     arrivals_us: Optional[np.ndarray],
+                     collect: bool) -> Optional[List[QueryResult]]:
+        """Vectorized admission for one chunk, bit-identical to per-query
+        :meth:`_admit` calls.
+
+        The in-flight trajectory under the no-deferral assumption is exact:
+        events retired before query ``q`` = (pending events with completion
+        <= arrival_q, via one searchsorted over the sorted event array) +
+        (earlier chunk queries whose completion lands before ``arrival_q``).
+        If any query would then exceed ``max_inflight_ios``, nothing has
+        been committed and the chunk replays through the sequential ledger
+        (deferrals change every later admission decision, so only the exact
+        path is correct there)."""
+        cfg = self.cfg
+        n = len(sm_time)
+        if n == 0:
+            return [] if collect else None
+        ios = np.asarray(sm_ios, np.int64)
+        stime = np.asarray(sm_time, np.float64)
+        if arrivals_us is None:
+            gap = (cfg.item_compute_us if cfg.arrival_gap_us is None
+                   else cfg.arrival_gap_us)
+            # cumsum accumulates left-to-right: identical rounding to the
+            # sequential now += gap walk
+            now_q = np.cumsum(np.concatenate([[self.now_us],
+                                              np.full(n, gap)]))[1:]
+        else:
+            now_q = np.maximum.accumulate(np.maximum(
+                np.asarray(arrivals_us, np.float64), self.now_us))
+        # pending completion events retired by each arrival
+        if self._events:
+            ev = sorted(self._events)
+            et = np.array([e[0] for e in ev], np.float64)
+            cei = np.cumsum(np.array([e[1] for e in ev], np.int64))
+            k = np.searchsorted(et, now_q, side="right")
+            retired_prev = np.where(k > 0, cei[np.maximum(k - 1, 0)], 0)
+        else:
+            ev = []
+            et = np.zeros(0, np.float64)
+            cei = np.zeros(0, np.int64)
+            retired_prev = np.zeros(n, np.int64)
+        # within-chunk completions (no-deferral assumption). A query's own
+        # event can only retire strictly after its arrival (sm_time > 0
+        # whenever sm_ios > 0), so "completion <= arrival_q" implies the
+        # pushing query precedes q.
+        has = ios > 0
+        comp = now_q[has] + stime[has]
+        order = np.argsort(comp, kind="stable")
+        comp_s = comp[order]
+        ios_s = ios[has][order]
+        if len(comp_s):
+            cis = np.cumsum(ios_s)
+            j = np.searchsorted(comp_s, now_q, side="right")
+            retired_chunk = np.where(j > 0, cis[np.maximum(j - 1, 0)], 0)
+        else:
+            retired_chunk = np.zeros(n, np.int64)
+        pushed_before = np.concatenate([[0], np.cumsum(ios)[:-1]])
+        inflight = (self.inflight + pushed_before
+                    - retired_prev - retired_chunk)
+        if np.any(inflight + ios > cfg.max_inflight_ios):
+            # saturation: replay through the exact per-query ledger (no
+            # state has been touched yet)
+            at = None if arrivals_us is None else np.asarray(arrivals_us)
+            results = [self._admit(
+                QueryStats(sm_ios=int(ios[q]), sm_time_us=float(stime[q])),
+                None if at is None else float(at[q])) for q in range(n)]
+            return results if collect else None
+        # no deferrals: commit the whole chunk at once
+        last_now = float(now_q[-1])
+        self.now_us = last_now
+        self.inflight += int(ios.sum()) - int(retired_prev[-1] if len(et)
+                                              else 0)
+        if len(comp_s):
+            self.inflight -= int(retired_chunk[-1])
+        keep = comp_s > last_now
+        rem = ([(t, i) for t, i in ev
+                if t > last_now] if ev else [])
+        rem += list(zip(comp_s[keep].tolist(), ios_s[keep].tolist()))
+        rem.sort()                      # a sorted list is a valid heap
+        self._events = rem
+        if cfg.inter_op_parallel:
+            lat = np.maximum(cfg.item_compute_us, stime)
+        else:
+            lat = cfg.item_compute_us + stime
+        lat_list = lat.tolist()
+        self.p_lat.extend(lat_list)
+        if collect:
+            return [QueryResult(latency_us=lat_list[q], sm_ios=int(ios[q]))
+                    for q in range(n)]
+        return None
 
     # -- reporting ------------------------------------------------------------
 

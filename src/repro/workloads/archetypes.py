@@ -25,6 +25,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.configs.base import DLRM_REGISTRY
+from repro.core.columnar import ColumnarQueries
 from repro.core.locality import TableMeta, sample_table_metas
 from repro.workloads.trace import (Trace, interleave_arrivals, mmpp_arrivals,
                                    nonhomogeneous_arrivals, poisson_arrivals,
@@ -115,7 +116,12 @@ def _make_arrivals(rng: np.random.Generator, a: ArrivalSpec,
 
 def build_trace(spec: WorkloadSpec) -> Trace:
     """Compile a spec into a reproducible trace (user-side requests only —
-    item tables run on the FM side and are not part of the SM query)."""
+    item tables run on the FM side and are not part of the SM query).
+
+    The trace is assembled directly in columnar (CSR) form: per-query index
+    draws append to one flat value stream + segment table-id/offset arrays
+    (the RNG consumption order is unchanged, so traces stay bit-identical
+    across the columnar refactor)."""
     rng = np.random.default_rng(np.random.SeedSequence([spec.seed, 1]))
     w = np.array([t.weight for t in spec.tenants], np.float64)
     if any(t.arrival is not None for t in spec.tenants):
@@ -137,26 +143,34 @@ def build_trace(spec: WorkloadSpec) -> Trace:
                             p=w / w.sum())
     metas = tenant_table_metas(spec)
 
-    requests: List[Dict[int, np.ndarray]] = []
     user_metas = [[m for m in metas[t.name] if m.kind == "user"]
                   for t in spec.tenants]
+    vals: List[np.ndarray] = []               # one entry per (query, table)
+    seg_tables: List[int] = []
+    nseg = np.empty(spec.num_queries, np.int64)
     for q in range(spec.num_queries):
         ti = int(tenant[q])
         t = spec.tenants[ti]
         epoch = (int(arrivals[q] // t.drift_period_us)
                  if t.drift_period_us > 0 else 0)
-        req: Dict[int, np.ndarray] = {}
+        nseg[q] = len(user_metas[ti])
         for m in user_metas[ti]:
             pf = m.pooling_factor
             if t.pool_sigma > 0:
                 pf = max(1, int(round(pf * rng.lognormal(0.0, t.pool_sigma))))
-            req[m.table_id] = zipf_indices_drift(
+            seg_tables.append(m.table_id)
+            vals.append(zipf_indices_drift(
                 rng, m.num_rows, m.zipf_alpha, pf, epoch,
-                t.drift_blend if t.drift_period_us > 0 else 0.0)
-        requests.append(req)
+                t.drift_blend if t.drift_period_us > 0 else 0.0))
 
+    lens = np.fromiter((len(v) for v in vals), np.int64, count=len(vals))
+    queries = ColumnarQueries(
+        np.concatenate(vals) if vals else np.zeros(0, np.int64),
+        np.concatenate([[0], np.cumsum(lens)]),
+        np.asarray(seg_tables, np.int64),
+        np.concatenate([[0], np.cumsum(nseg)]))
     return Trace(spec.name, spec.seed, arrivals, tenant.astype(np.int64),
-                 tuple(t.name for t in spec.tenants), requests, metas)
+                 tuple(t.name for t in spec.tenants), queries, metas)
 
 
 # -- the named archetype grid -------------------------------------------------

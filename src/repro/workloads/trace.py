@@ -1,10 +1,15 @@
 """Trace objects + arrival/index processes for the workload engine.
 
 A :class:`Trace` is the unit the serving layer consumes: per query an
-absolute arrival time, a tenant id and an embedding-bag request dict
-(``{table_id: indices}``, global table ids). Traces are fully determined by
-their spec + seed — building the same spec twice yields bit-identical
-arrays — so every benchmark and differential test can replay them.
+absolute arrival time, a tenant id and an embedding-bag request over the
+user-side tables. Requests are stored **columnar** (one flat index array +
+CSR offsets per (query, table) segment — :class:`~repro.core.columnar.
+ColumnarQueries`), so chunking, route-splitting and the per-table grouping
+the serving engine needs are array slices, not Python list/dict copies; the
+``requests`` property is the dict-of-arrays compatibility view. Traces are
+fully determined by their spec + seed — building the same spec twice yields
+bit-identical arrays — so every benchmark and differential test can replay
+them.
 
 Arrival processes (all times in microseconds):
 
@@ -25,6 +30,7 @@ from typing import Callable, Dict, Iterator, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.columnar import ColumnarChunk, ColumnarQueries
 from repro.core.locality import TableMeta
 
 _DRIFT_SALT = np.uint64(0xA24BAED4963EE407)
@@ -116,11 +122,20 @@ def mmpp_arrivals(rng: np.random.Generator, n: int, rate_qps: float,
 
 @dataclasses.dataclass(frozen=True)
 class TraceChunk:
-    """One vectorized serving batch sliced out of a trace."""
+    """One vectorized serving batch sliced out of a trace.
+
+    ``columnar`` is the CSR view the fast path consumes
+    (``ServeScheduler.serve_columnar`` / ``serve_trace``); ``requests``
+    materializes the dict-of-arrays compatibility view on demand.
+    """
     start: int
-    requests: List[Dict[int, np.ndarray]]
+    columnar: ColumnarChunk
     arrival_us: np.ndarray
     tenant: np.ndarray
+
+    @property
+    def requests(self) -> List[Dict[int, np.ndarray]]:
+        return self.columnar.requests()
 
 
 @dataclasses.dataclass
@@ -131,11 +146,25 @@ class Trace:
     arrival_us: np.ndarray                    # [N] f64, nondecreasing
     tenant: np.ndarray                        # [N] i64 -> index into tenant_names
     tenant_names: Tuple[str, ...]
-    requests: List[Dict[int, np.ndarray]]     # per query {table_id: indices}
+    queries: ColumnarQueries                  # columnar (CSR) request store
     metas: Dict[str, List[TableMeta]]         # per-tenant inventory, global ids
 
+    @classmethod
+    def from_requests(cls, name: str, seed: int, arrival_us: np.ndarray,
+                      tenant: np.ndarray, tenant_names: Tuple[str, ...],
+                      requests: Sequence[Dict[int, np.ndarray]],
+                      metas: Dict[str, List[TableMeta]]) -> "Trace":
+        """Build a trace from per-query request dicts (compat constructor)."""
+        return cls(name, seed, arrival_us, tenant, tenant_names,
+                   ColumnarQueries.from_requests(requests), metas)
+
+    @property
+    def requests(self) -> List[Dict[int, np.ndarray]]:
+        """Dict-of-arrays view of the columnar store (cached)."""
+        return self.queries.requests()
+
     def __len__(self) -> int:
-        return len(self.requests)
+        return len(self.arrival_us)
 
     @property
     def duration_us(self) -> float:
@@ -151,19 +180,27 @@ class Trace:
         return [m for ms in self.metas.values() for m in ms]
 
     def chunks(self, batch: int) -> Iterator[TraceChunk]:
-        """Arrival-order batches for ``ServeScheduler.serve_batch``."""
+        """Arrival-order batches; each chunk's columnar view slices the
+        trace-level table grouping (computed once, cached on ``queries``)."""
         for s in range(0, len(self), batch):
             e = min(s + batch, len(self))
-            yield TraceChunk(s, self.requests[s:e], self.arrival_us[s:e],
-                             self.tenant[s:e])
+            yield TraceChunk(s, self.queries.chunk(s, e, batch),
+                             self.arrival_us[s:e], self.tenant[s:e])
 
     def subset(self, mask: np.ndarray) -> "Trace":
         """Route-split view: the queries where ``mask`` is True (arrival
-        order preserved). Metas are shared, not copied."""
+        order preserved). Pure array slicing — O(segments), no dict copies;
+        metas are shared, not copied. A subset selecting every query (the
+        single-host route split) shares the columnar store itself, so its
+        cached grouping and plan factorizations survive across repeated
+        ``ClusterSim.run`` calls on the same trace."""
         idx = np.nonzero(np.asarray(mask))[0]
+        if len(idx) == len(self):
+            return Trace(self.name, self.seed, self.arrival_us, self.tenant,
+                         self.tenant_names, self.queries, self.metas)
         return Trace(self.name, self.seed, self.arrival_us[idx],
                      self.tenant[idx], self.tenant_names,
-                     [self.requests[i] for i in idx], self.metas)
+                     self.queries.subset(idx), self.metas)
 
 
 def windowed_qps(arrival_us: np.ndarray, duration_us: float,
