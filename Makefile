@@ -3,11 +3,13 @@ PY := PYTHONPATH=$(PYTHONPATH) python
 
 .PHONY: test test-fast bench-smoke bench-json docs-check check
 
+# the full suite, slow markers included (plain `pytest -x -q` — the tier-1
+# invocation — skips slow tests so it stays well under 5 minutes)
 test:
-	$(PY) -m pytest -x -q
+	$(PY) -m pytest -x -q --runslow
 
-# tier-1 minus the slow markers (deep property sweeps, traffic-driven
-# benchmark goldens, the XLA dry-run)
+# tier-1 minus the slow markers (heavyweight arch smoke, deep property
+# sweeps, traffic-driven benchmark goldens, the XLA dry-run)
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
 
@@ -16,12 +18,14 @@ bench-smoke:
 	$(PY) benchmarks/run.py --only fig3_io
 	$(PY) -c "from benchmarks import perf_trace; perf_trace.run(num_queries=2000)"
 	$(PY) -c "from benchmarks import scenarios; scenarios.run(num_queries=64)"
+	$(PY) -c "from benchmarks import device_tail; device_tail.run(num_queries=400)"
 
-# machine-readable us/query for the serving hot paths -> BENCH_serve.json
-# (tracked perf trajectory: serve_batched, perf_trace, scenario sweep)
+# machine-readable us/query for the serving hot paths -> BENCH_serve.json.
+# Entries are (git_sha, generated_unix)-keyed and APPENDED, so the file
+# accumulates the perf trajectory across PRs.
 bench-json:
 	$(PY) benchmarks/run.py --json BENCH_serve.json \
-		--only serve_batched,perf_trace,scenarios
+		--only serve_batched,perf_trace,scenarios,device_tail
 
 docs-check:
 	$(PY) tools/docs_check.py

@@ -1,0 +1,137 @@
+"""Fig. 3, dynamically: SCM tail latency under bursts, model updates and the
+§4.1 tuning knobs — the event-driven sampled device plane.
+
+The closed-form Fig. 3 benchmark (``fig3_io.py``) sweeps the *mean* loaded
+latency. This one drives the same devices with bursty traffic through
+``latency_mode="sampled"`` hosts (Table 9's accelerated HW-AN/HW-AO) and
+measures what the mean cannot show:
+
+* **Nand collapses, 3DXP stays flat** — queueing + depth-knee thrash under
+  MMPP bursts wreck the Nand p99 while Optane barely moves;
+* **read/write interference** — an endurance-bounded model-update stream
+  (``UpdateSpec``) craters the Nand read tail (program+GC occupancy on the
+  residency channel) and is negligible on 3DXP;
+* **the tuning knobs earn their keep** — outstanding-IO throttling keeps
+  aggregate depth under the knee, read-priority scheduling (program
+  suspend) removes the update interference, burst smoothing paces
+  admission;
+* **Eq. 5 at the tail** — feasible QPS judged at p99 instead of the mean
+  (``HostReport.feasible_qps_p99`` vs ``feasible_qps``): the provisioning
+  delta a mean-based model hides.
+
+Run: PYTHONPATH=src:. python benchmarks/run.py --only device_tail
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit
+from repro.core.power import HW_AN, HW_AO
+from repro.devices import DeviceTuning, UpdateSpec
+from repro.runtime.cluster import HostSim, HostSpec
+from repro.workloads import ARCHETYPES, build_trace
+
+# the burst-smoothing regime: MMPP traffic well above the archetype default,
+# deep enough that bursts cross the Nand depth knee
+BURST_RATE_QPS = 6_000.0
+UPDATE = UpdateSpec(model_size_gb=1000.0)        # 1 TB model refresh stream
+
+# Table 9's accelerated hosts, with the accelerator sped up so the item-side
+# compute (1e6/accel_qps us) sits well below the SM tail — like Fig. 3, this
+# benchmark isolates the *device* path; at the stock 450-QPS accelerator a
+# 2.2 ms compute floor would mask every sub-floor SM excursion.
+HOSTS = {"nand_flash": dataclasses.replace(HW_AN, accel_qps=5_000.0),
+         "optane_ssd": dataclasses.replace(HW_AO, accel_qps=5_000.0)}
+
+TUNINGS = {
+    "untuned": None,
+    "throttle": DeviceTuning(max_outstanding=12),
+    "read_priority": DeviceTuning(read_priority=True),
+    # smoothing trades admission delay for knee pressure: fewer depth
+    # collapses and a better p95; the paced waits keep it out of "tuned"
+    "smoothed": DeviceTuning(read_priority=True, smoothing_iops=6e5,
+                             smoothing_window_us=2_000.0),
+    "tuned": DeviceTuning(max_outstanding=12, read_priority=True),
+}
+
+
+def _trace(num_queries: int):
+    spec = ARCHETYPES["bursty"]
+    return build_trace(dataclasses.replace(
+        spec, num_queries=num_queries,
+        arrival=dataclasses.replace(spec.arrival, rate_qps=BURST_RATE_QPS)))
+
+
+def _cell(trace, device: str, updating: bool, tuning) -> dict:
+    spec = HostSpec(f"{device}/{'upd' if updating else 'idle'}",
+                    HOSTS[device], device=device, latency_mode="sampled",
+                    update=UPDATE if updating else None, tuning=tuning)
+    sim = HostSim(spec, trace.all_metas(), latency_target_us=10_000.0, seed=0)
+    sim.run_trace(trace, 32, 0.0)
+    rep = sim.report(trace.duration_us)
+    dsim = sim.store.io.sim
+    return {"p50_us": round(rep.p50_us, 1), "p95_us": round(rep.p95_us, 1),
+            "p99_us": round(rep.p99_us, 1),
+            "feasible_qps_mean": round(rep.feasible_qps, 1),
+            "feasible_qps_p99": round(rep.feasible_qps_p99, 1),
+            "tail_qps_penalty": round(
+                1.0 - rep.feasible_qps_p99 / max(rep.feasible_qps, 1e-9), 3),
+            "depth_collapses": dsim.depth_collapses,
+            "gc_events": dsim.update.gc_events if dsim.update else 0}
+
+
+def run(num_queries: int = 1200) -> dict:
+    trace = _trace(num_queries)
+    out = {"offered_qps": round(trace.offered_qps, 0), "grid": {}}
+    for device in HOSTS:
+        for updating in (False, True):
+            for tname, tuning in TUNINGS.items():
+                cell = _cell(trace, device, updating, tuning)
+                key = f"{device}/{'updating' if updating else 'idle'}/{tname}"
+                out["grid"][key] = cell
+                emit("device_tail", 0.0,
+                     f"{key};p99={cell['p99_us']};"
+                     f"fqps_mean={cell['feasible_qps_mean']};"
+                     f"fqps_p99={cell['feasible_qps_p99']}")
+    g = out["grid"]
+
+    def p99(device, upd, tune):
+        return g[f"{device}/{upd}/{tune}"]["p99_us"]
+
+    # Fig. 3 dynamic ordering + §4.1 knob efficacy, from measured traffic
+    checks = {
+        # load alone degrades the Nand tail well past its p50...
+        "nand_burst_tail": p99("nand_flash", "idle", "untuned")
+        > 1.5 * g["nand_flash/idle/untuned"]["p50_us"],
+        # ...updates degrade it further...
+        "nand_update_interference": p99("nand_flash", "updating", "untuned")
+        > 1.5 * p99("nand_flash", "idle", "untuned"),
+        # ...while the Optane tail stays near-flat through all of it
+        "optane_flat": p99("optane_ssd", "updating", "untuned")
+        <= 1.25 * max(g["optane_ssd/idle/untuned"]["p50_us"], 1.0),
+        # outstanding-IO throttling measurably improves the Nand p99 (the
+        # increment over read-priority alone: with the write craters out of
+        # the way, what remains of the tail is depth-knee thrash)
+        "throttle_helps_nand": p99("nand_flash", "updating", "tuned")
+        < 0.99 * p99("nand_flash", "updating", "read_priority"),
+        # read-priority scheduling removes the update interference
+        "read_priority_recovers": p99("nand_flash", "updating",
+                                      "read_priority")
+        < 0.6 * p99("nand_flash", "updating", "untuned"),
+        # burst smoothing relieves knee pressure (fewer depth collapses)
+        "smoothing_relieves_knee": g["nand_flash/updating/smoothed"][
+            "depth_collapses"]
+        < g["nand_flash/updating/read_priority"]["depth_collapses"],
+    }
+    out["checks"] = checks
+    out["fig3_dynamic_ordering"] = all(checks.values())
+    # the tail-aware Eq. 5 delta: how much feasible QPS the mean overstates
+    out["nand_tail_qps_penalty"] = g["nand_flash/updating/untuned"][
+        "tail_qps_penalty"]
+    out["optane_tail_qps_penalty"] = g["optane_ssd/updating/untuned"][
+        "tail_qps_penalty"]
+    emit("device_tail", 0.0,
+         f"ordering={'ok' if out['fig3_dynamic_ordering'] else 'VIOLATED'};"
+         f"nand_tail_penalty={out['nand_tail_qps_penalty']};"
+         f"optane_tail_penalty={out['optane_tail_qps_penalty']}")
+    return out

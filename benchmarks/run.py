@@ -5,15 +5,52 @@ Each module reproduces one paper table/figure; the roofline benchmark (slow:
 it compiles shallow-unrolled probes per cell) runs only with --roofline.
 
 ``--json PATH`` additionally writes every executed suite's returned dict to
-a machine-readable JSON file (``make bench-json`` -> ``BENCH_serve.json``),
-so the serving-path perf trajectory (us/query for ``serve_batched``,
-``perf_trace`` and the scenario sweep) can be tracked across PRs.
+a machine-readable JSON file (``make bench-json`` -> ``BENCH_serve.json``).
+Entries are keyed by ``(git_sha, generated_unix)`` and APPENDED — the file
+accumulates the perf trajectory (us/query for ``serve_batched``,
+``perf_trace`` and the scenario sweep) across PRs instead of overwriting it.
 """
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 import traceback
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001
+        return "unknown"
+
+
+def _append_json(path: str, results: dict) -> None:
+    """Append a (git_sha, generated_unix)-keyed entry, migrating the legacy
+    single-snapshot layout ({generated_unix, results}) into the first entry."""
+    data = {"entries": []}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            if isinstance(old, dict) and isinstance(old.get("entries"), list):
+                data = old
+            elif isinstance(old, dict) and "results" in old:
+                data["entries"] = [{
+                    "git_sha": old.get("git_sha", "unknown"),
+                    "generated_unix": old.get("generated_unix", 0),
+                    "results": old["results"]}]
+        except (json.JSONDecodeError, OSError):
+            pass  # unreadable file: start a fresh trajectory
+    data["entries"].append({"git_sha": _git_sha(),
+                            "generated_unix": int(time.time()),
+                            "results": results})
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, default=str)
 
 
 def main() -> None:
@@ -26,9 +63,9 @@ def main() -> None:
                     help="write executed suites' result dicts to PATH")
     args = ap.parse_args()
 
-    from benchmarks import (depruning, fig1_skew, fig3_io, fig45_locality,
-                            fig6_cache_org, interop_warmup, kernels,
-                            perf_trace, scenarios, serve_batched,
+    from benchmarks import (depruning, device_tail, fig1_skew, fig3_io,
+                            fig45_locality, fig6_cache_org, interop_warmup,
+                            kernels, perf_trace, scenarios, serve_batched,
                             table8_power, table9_scaleout,
                             table11_multitenancy, table34_pooled)
 
@@ -37,6 +74,7 @@ def main() -> None:
         ("perf_trace", perf_trace.run),
         ("fig1_skew", fig1_skew.run),
         ("fig3_io", fig3_io.run),
+        ("device_tail", device_tail.run),
         ("fig45_locality", fig45_locality.run),
         ("fig6_cache_org", fig6_cache_org.run),
         ("table34_pooled", table34_pooled.run),
@@ -69,10 +107,8 @@ def main() -> None:
         from benchmarks import roofline
         results["roofline"] = roofline.run()
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"generated_unix": int(time.time()),
-                       "results": results}, f, indent=2, default=str)
-        print(f"# wrote {args.json}", file=sys.stderr)
+        _append_json(args.json, results)
+        print(f"# appended to {args.json}", file=sys.stderr)
     if failed:
         raise SystemExit(1)
 

@@ -35,6 +35,19 @@ class DeviceModel:
     alpha: float = 1.0
     # burst sensitivity: queue depth above which latency degrades superlinearly
     max_outstanding: int = 256
+    # -- event-driven simulator shape (devices/sim.py) -----------------------
+    # parallel service channels per device: how many IO waves the device can
+    # execute concurrently before queueing sets in (NVMe channel/die
+    # parallelism; Optane's internal parallelism is much wider than Nand's)
+    channels: int = 8
+    # dispersion of sampled service times (coefficient of variation): Nand is
+    # heavy-tailed (program/erase interference), 3DXP is tight
+    service_cv: float = 0.3
+    # GC behavior under writes: probability a program triggers a collection
+    # pause, and the service-time multiplier when it does (0/1 = no GC: 3DXP
+    # writes in place)
+    gc_prob: float = 0.0
+    gc_factor: float = 1.0
 
     def loaded_latency_us(self, iops: float, outstanding: int = 32) -> float:
         rho = min(iops / self.iops_max, 0.999)
@@ -64,25 +77,30 @@ DEVICES: Dict[str, DeviceModel] = {
         name="PCIe Nand Flash", iops_max=0.5e6, base_latency_us=90.0,
         access_granularity=4096, endurance_dwpd=5, cost_rel_dram=1 / 30,
         power_w=10.0, sourcing="multi", capacity_gb=2000, alpha=1.6,
-        max_outstanding=64),
+        max_outstanding=64,
+        channels=4, service_cv=0.85, gc_prob=0.06, gc_factor=8.0),
     "optane_ssd": DeviceModel(
         name="PCIe 3DXP (Optane)", iops_max=4.0e6, base_latency_us=9.0,
         access_granularity=512, endurance_dwpd=100, cost_rel_dram=1 / 5,
         power_w=14.0, sourcing="single", capacity_gb=400, alpha=0.7,
-        max_outstanding=1024),
+        max_outstanding=1024, write_bw_gbs=2.2,
+        channels=16, service_cv=0.2),
     "zssd": DeviceModel(
         name="PCIe ZSSD", iops_max=1.0e6, base_latency_us=30.0,
         access_granularity=4096, endurance_dwpd=5, cost_rel_dram=1 / 10,
         power_w=10.0, sourcing="single", capacity_gb=800, alpha=1.3,
-        max_outstanding=128),
+        max_outstanding=128, write_bw_gbs=1.5,
+        channels=8, service_cv=0.5, gc_prob=0.04, gc_factor=5.0),
     "optane_dimm": DeviceModel(
         name="DIMM 3DXP (Optane)", iops_max=40e6, base_latency_us=0.3,
         access_granularity=64, endurance_dwpd=0, cost_rel_dram=1 / 3,
-        power_w=15.0, sourcing="single", capacity_gb=512, alpha=0.5),
+        power_w=15.0, sourcing="single", capacity_gb=512, alpha=0.5,
+        channels=64, service_cv=0.05),
     "cxl_3dxp": DeviceModel(
         name="CXL 3DXP", iops_max=12e6, base_latency_us=0.6,
         access_granularity=128, endurance_dwpd=0, cost_rel_dram=1 / 4,
-        power_w=15.0, sourcing="single", capacity_gb=1024, alpha=0.5),
+        power_w=15.0, sourcing="single", capacity_gb=1024, alpha=0.5,
+        channels=32, service_cv=0.05),
 }
 
 
@@ -96,18 +114,29 @@ class IOQueueConfig:
 
 class IOEngine:
     """Batched async IO simulation (io_uring analogue): submit a query's
-    misses, receive per-batch latency + bus bytes from the device model."""
+    misses, receive per-batch latency + bus bytes from the device model.
+
+    Two latency modes share every other piece of accounting (bus bytes, read
+    amplification, IO counters): the default *analytic* mode prices each
+    submission with the closed-form loaded-latency mean below, and the
+    *sampled* mode — when constructed with a
+    :class:`repro.devices.sim.DeviceSim` — routes submissions (with their
+    arrival times, ``at_us``) through the event-driven device queues instead.
+    With ``sim=None`` the ``at_us`` arguments are ignored and the analytic
+    arithmetic is untouched, bit for bit."""
 
     def __init__(self, device: DeviceModel, num_devices: int = 1,
-                 queue: IOQueueConfig = IOQueueConfig()):
+                 queue: IOQueueConfig = IOQueueConfig(), sim=None):
         self.device = device
         self.num_devices = num_devices
         self.queue = queue
+        self.sim = sim          # devices.sim.DeviceSim when latency_mode="sampled"
         self.total_ios = 0
         self.total_bus_bytes = 0
         self.total_wanted_bytes = 0
 
-    def submit(self, num_ios: int, row_bytes: int, bg_iops: float):
+    def submit(self, num_ios: int, row_bytes: int, bg_iops: float,
+               at_us: float = None):
         """Simulate one batched submission of ``num_ios`` row reads while the
         device sustains ``bg_iops`` background load.
 
@@ -116,11 +145,15 @@ class IOEngine:
         """
         if num_ios == 0:
             return 0.0, 0
-        per_dev = math.ceil(num_ios / self.num_devices)
-        outstanding = min(per_dev, self.queue.max_outstanding_per_table)
-        waves = math.ceil(per_dev / max(1, outstanding))
-        lat = waves * self.device.loaded_latency_us(
-            bg_iops / self.num_devices, outstanding)
+        if self.sim is not None:
+            lat = self.sim.submit(
+                self.sim.now_us if at_us is None else at_us, num_ios, bg_iops)
+        else:
+            per_dev = math.ceil(num_ios / self.num_devices)
+            outstanding = min(per_dev, self.queue.max_outstanding_per_table)
+            waves = math.ceil(per_dev / max(1, outstanding))
+            lat = waves * self.device.loaded_latency_us(
+                bg_iops / self.num_devices, outstanding)
         amp = self.device.read_amplification(row_bytes, self.queue.small_granularity)
         bus = int(num_ios * row_bytes * amp)
         self.total_ios += num_ios
@@ -128,7 +161,8 @@ class IOEngine:
         self.total_wanted_bytes += num_ios * row_bytes
         return lat, bus
 
-    def submit_batch(self, num_ios: np.ndarray, row_bytes: int, bg_iops: float):
+    def submit_batch(self, num_ios: np.ndarray, row_bytes: int, bg_iops: float,
+                     at_us: np.ndarray = None):
         """Vectorized :meth:`submit` for many independent submissions (one
         per query) against the same table/device.
 
@@ -143,19 +177,25 @@ class IOEngine:
         nz = n > 0
         if not nz.any():
             return lat, bus
-        per_dev = -(-n[nz] // self.num_devices)
-        outstanding = np.minimum(per_dev, self.queue.max_outstanding_per_table)
-        waves = -(-per_dev // np.maximum(1, outstanding))
-        # loaded_latency_us, vectorized over `outstanding` (rho is shared)
-        rho = min((bg_iops / self.num_devices) / self.device.iops_max, 0.999)
-        base = self.device.base_latency_us / (1.0 - rho) ** self.device.alpha
-        l = np.full(per_dev.shape, base, np.float64)
-        burst = outstanding > self.device.max_outstanding
-        l[burst] *= (outstanding[burst] / self.device.max_outstanding) ** 2
-        l = waves * l
+        if self.sim is not None:
+            at = (np.full(n.shape, self.sim.now_us) if at_us is None
+                  else np.asarray(at_us, np.float64))
+            lat = self.sim.submit_batch(at, n, bg_iops)
+        else:
+            per_dev = -(-n[nz] // self.num_devices)
+            outstanding = np.minimum(per_dev,
+                                     self.queue.max_outstanding_per_table)
+            waves = -(-per_dev // np.maximum(1, outstanding))
+            # loaded_latency_us, vectorized over `outstanding` (rho shared)
+            rho = min((bg_iops / self.num_devices) / self.device.iops_max,
+                      0.999)
+            base = self.device.base_latency_us / (1.0 - rho) ** self.device.alpha
+            l = np.full(per_dev.shape, base, np.float64)
+            burst = outstanding > self.device.max_outstanding
+            l[burst] *= (outstanding[burst] / self.device.max_outstanding) ** 2
+            lat[nz] = waves * l
         amp = self.device.read_amplification(row_bytes, self.queue.small_granularity)
         b = (n[nz] * row_bytes * amp).astype(np.int64)
-        lat[nz] = l
         bus[nz] = b
         self.total_ios += int(n.sum())
         self.total_bus_bytes += int(b.sum())
@@ -163,11 +203,13 @@ class IOEngine:
         return lat, bus
 
     def submit_batch_multi(self, num_ios: np.ndarray, row_bytes: np.ndarray,
-                           bg_iops: float):
+                           bg_iops: float, at_us: np.ndarray = None):
         """One coalesced submission covering many (table, query) pairs with
         per-element row sizes — the cross-table form of :meth:`submit_batch`.
         Latency depends only on the IO count (row size enters via bus bytes),
-        so this stays bit-identical to per-element ``submit`` calls."""
+        so this stays bit-identical to per-element ``submit`` calls. In
+        sampled mode ``at_us`` carries each element's arrival time into the
+        device queues (elements are served in arrival order)."""
         n = np.asarray(num_ios, np.int64)
         rb = np.asarray(row_bytes, np.int64)
         lat = np.zeros(n.shape, np.float64)
@@ -175,15 +217,22 @@ class IOEngine:
         nz = n > 0
         if not nz.any():
             return lat, bus
-        per_dev = -(-n[nz] // self.num_devices)
-        outstanding = np.minimum(per_dev, self.queue.max_outstanding_per_table)
-        waves = -(-per_dev // np.maximum(1, outstanding))
-        rho = min((bg_iops / self.num_devices) / self.device.iops_max, 0.999)
-        base = self.device.base_latency_us / (1.0 - rho) ** self.device.alpha
-        l = np.full(per_dev.shape, base, np.float64)
-        burst = outstanding > self.device.max_outstanding
-        l[burst] *= (outstanding[burst] / self.device.max_outstanding) ** 2
-        lat[nz] = waves * l
+        if self.sim is not None:
+            at = (np.full(n.shape, self.sim.now_us) if at_us is None
+                  else np.asarray(at_us, np.float64))
+            lat = self.sim.submit_batch(at, n, bg_iops)
+        else:
+            per_dev = -(-n[nz] // self.num_devices)
+            outstanding = np.minimum(per_dev,
+                                     self.queue.max_outstanding_per_table)
+            waves = -(-per_dev // np.maximum(1, outstanding))
+            rho = min((bg_iops / self.num_devices) / self.device.iops_max,
+                      0.999)
+            base = self.device.base_latency_us / (1.0 - rho) ** self.device.alpha
+            l = np.full(per_dev.shape, base, np.float64)
+            burst = outstanding > self.device.max_outstanding
+            l[burst] *= (outstanding[burst] / self.device.max_outstanding) ** 2
+            lat[nz] = waves * l
         if self.queue.small_granularity:
             amp = 1.0
         else:

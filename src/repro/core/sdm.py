@@ -54,6 +54,14 @@ class SDMConfig:
     num_devices: int = 2
     item_time_us: float = 200.0          # item-side (FM/accelerator) per-query time
     row_cache_ways: int = 8              # set-associativity of the FM row cache
+    # -- device-plane latency mode (src/repro/devices/) ----------------------
+    # "analytic": closed-form loaded-latency means (the default; bit-stable).
+    # "sampled": event-driven DeviceSim queues — per-wave sampled service,
+    # write-plane interference, §4.1 tuning knobs; seeded by ``sim_seed``.
+    latency_mode: str = "analytic"
+    tuning: object = None                # devices.DeviceTuning (sampled mode)
+    update: object = None                # devices.UpdateSpec (write plane)
+    sim_seed: int = 0
 
 
 @dataclasses.dataclass
@@ -83,7 +91,16 @@ class SDMEmbeddingStore:
         self.pooled_cache = (PooledEmbeddingCache(cfg.pooled_cache_bytes,
                                                   cfg.pooled_len_threshold)
                              if cfg.pooled_cache_bytes else None)
-        self.io = IOEngine(device, cfg.num_devices, cfg.io_queue)
+        if cfg.latency_mode == "sampled":
+            from repro.devices import DEFAULT_TUNING, DeviceSim
+            sim = DeviceSim(device, cfg.num_devices, cfg.io_queue,
+                            cfg.tuning or DEFAULT_TUNING, cfg.update,
+                            seed=cfg.sim_seed)
+        elif cfg.latency_mode == "analytic":
+            sim = None
+        else:
+            raise ValueError(f"unknown latency_mode {cfg.latency_mode!r}")
+        self.io = IOEngine(device, cfg.num_devices, cfg.io_queue, sim=sim)
         self.rng = np.random.default_rng(seed)
         self.stats = QueryStats()
         self.batch_fallbacks = 0   # columnar path dropped to the exact slow path
@@ -104,9 +121,11 @@ class SDMEmbeddingStore:
     # -- query path ----------------------------------------------------------
 
     def lookup_pool(self, table_id: int, indices: np.ndarray,
-                    bg_iops: float = 0.0) -> dict:
+                    bg_iops: float = 0.0, at_us: float = None) -> dict:
         """One embedding-bag request (Algorithm 1). Returns accounting dict;
-        the pooled vector too when payloads are materialized."""
+        the pooled vector too when payloads are materialized. ``at_us`` is
+        the arrival time the sampled device plane queues against (ignored —
+        and harmless — in analytic mode)."""
         m = self.metas[table_id]
         place = self.placement[table_id]
         st = self.stats
@@ -132,7 +151,7 @@ class SDMEmbeddingStore:
                 st.row_hits += int(hit.sum())
             else:  # SM_UNCACHED: every lookup is an IO
                 ios = len(indices)
-            lat, _ = self.io.submit(ios, m.dim_bytes, bg_iops)
+            lat, _ = self.io.submit(ios, m.dim_bytes, bg_iops, at_us=at_us)
             st.sm_ios += ios
 
         vec = None
@@ -147,14 +166,16 @@ class SDMEmbeddingStore:
 
         return {"latency_us": lat, "ios": ios, "pooled_hit": False, "vector": vec}
 
-    def serve_query(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0) -> QueryStats:
+    def serve_query(self, requests: Dict[int, np.ndarray], bg_iops: float = 0.0,
+                    at_us: float = None) -> QueryStats:
         """requests: {table_id: indices}. User-side tables execute against SM
         in parallel with the item-side FM compute (Eq. 3): query latency is
-        max(item_time, slowest SM batch)."""
+        max(item_time, slowest SM batch). ``at_us`` feeds the sampled device
+        queues; analytic mode ignores it."""
         sm_lat = 0.0
         ios = 0
         for tid, idx in requests.items():
-            r = self.lookup_pool(tid, idx, bg_iops)
+            r = self.lookup_pool(tid, idx, bg_iops, at_us=at_us)
             sm_lat = max(sm_lat, r["latency_us"])
             ios += r["ios"]
         q = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat), sm_ios=ios,
@@ -164,7 +185,8 @@ class SDMEmbeddingStore:
 
     # -- batched (columnar) query path ----------------------------------------
 
-    def serve_columnar(self, chunk: ColumnarChunk, bg_iops: float = 0.0
+    def serve_columnar(self, chunk: ColumnarChunk, bg_iops: float = 0.0,
+                       arrivals_us: Optional[np.ndarray] = None
                        ) -> Tuple[np.ndarray, np.ndarray]:
         """Serve a columnar (CSR) chunk — the vectorized data plane.
 
@@ -181,6 +203,10 @@ class SDMEmbeddingStore:
         cache) before all probes complete fall back to exactly that
         sequential path — the pre-flight plan mutates nothing, so the
         fallback is exact (see ``batch_fallbacks``).
+
+        ``arrivals_us`` (aligned with the chunk's queries) carries the trace
+        arrival times into the sampled device plane, where each query's IO
+        submissions queue at its own arrival; analytic mode ignores it.
         """
         nq = chunk.n_queries
         if nq == 0:
@@ -189,7 +215,7 @@ class SDMEmbeddingStore:
         st = self.stats
         views = chunk.table_views(with_hashes=pc is not None)
         if not self._pooled_headroom(views):
-            return self._serve_fallback(chunk, bg_iops)
+            return self._serve_fallback(chunk, bg_iops, arrivals_us)
 
         # Pre-flight row-cache plan over every cached table's keys (a
         # superset of what the row phase will touch: pooled hits drop out
@@ -227,7 +253,7 @@ class SDMEmbeddingStore:
                     np.concatenate([v.keys for v in cached]))
                 plan_inv = None if plan is None else plan["inv"]
             if plan is None:     # an eviction would occur; nothing mutated yet
-                return self._serve_fallback(chunk, bg_iops)
+                return self._serve_fallback(chunk, bg_iops, arrivals_us)
 
         # Phase A — pooled-cache probes per table (a Python segment loop
         # only when the pooled cache exists; pure slicing otherwise).
@@ -378,11 +404,16 @@ class SDMEmbeddingStore:
                                  np.int64))
 
         # IO is coalesced across tables too: one submit_batch_multi covers
-        # the whole chunk (latency is per-request, independent of grouping)
+        # the whole chunk (latency is per-request, independent of grouping in
+        # analytic mode; the sampled device queues serve it in arrival order)
         if io_aq:
+            cat_aq = np.concatenate(io_aq)
+            at = (None if arrivals_us is None
+                  else np.asarray(arrivals_us, np.float64)[cat_aq])
             lats, _ = self.io.submit_batch_multi(
-                np.concatenate(io_ios), np.concatenate(io_rb), bg_iops)
-            np.maximum.at(sm_lat, np.concatenate(io_aq), lats)
+                np.concatenate(io_ios), np.concatenate(io_rb), bg_iops,
+                at_us=at)
+            np.maximum.at(sm_lat, cat_aq, lats)
         if plan is not None:
             if c_act:
                 self.row_cache.commit(plan, ids, events)
@@ -422,7 +453,9 @@ class SDMEmbeddingStore:
         return sm_lat, ios_q
 
     def serve_batch(self, requests_list: Sequence[Dict[int, np.ndarray]],
-                    bg_iops: float = 0.0) -> List[QueryStats]:
+                    bg_iops: float = 0.0,
+                    arrivals_us: Optional[np.ndarray] = None
+                    ) -> List[QueryStats]:
         """Dict-of-arrays compatibility wrapper: converts the batch to
         columnar form and serves it through :meth:`serve_columnar`.
         Bit-identical to calling :meth:`serve_query` per request in order."""
@@ -430,7 +463,7 @@ class SDMEmbeddingStore:
         if nq == 0:
             return []
         chunk = ColumnarQueries.from_requests(requests_list).whole()
-        sm_lat, ios_q = self.serve_columnar(chunk, bg_iops)
+        sm_lat, ios_q = self.serve_columnar(chunk, bg_iops, arrivals_us)
         item = self.cfg.item_time_us
         out = []
         for q in range(nq):
@@ -450,7 +483,9 @@ class SDMEmbeddingStore:
     # serve_columnar, bit for bit).
 
     def serve_batch_dict(self, requests_list: Sequence[Dict[int, np.ndarray]],
-                         bg_iops: float = 0.0) -> List[QueryStats]:
+                         bg_iops: float = 0.0,
+                         arrivals_us: Optional[np.ndarray] = None
+                         ) -> List[QueryStats]:
         """Serve a batch of query dicts through the legacy dict plane.
         Bit-identical to :meth:`serve_query` per request in order (and so to
         :meth:`serve_columnar` on the same queries)."""
@@ -468,7 +503,10 @@ class SDMEmbeddingStore:
             per_table[tid] = (qids, all_idx, lens)
         if not self._pooled_headroom_dict(per_table):
             self.batch_fallbacks += 1
-            return [self.serve_query(r, bg_iops) for r in requests_list]
+            if arrivals_us is None:
+                return [self.serve_query(r, bg_iops) for r in requests_list]
+            return [self.serve_query(r, bg_iops, at_us=float(at))
+                    for r, at in zip(requests_list, arrivals_us)]
 
         # pre-flight row-cache plan over every cached table's keys
         spans = {}
@@ -510,7 +548,10 @@ class SDMEmbeddingStore:
             cat_ios = np.concatenate([r[1] for r in self._io_req])
             cat_rb = np.concatenate([np.full(len(r[1]), r[2], np.int64)
                                      for r in self._io_req])
-            lats, _ = self.io.submit_batch_multi(cat_ios, cat_rb, bg_iops)
+            at = (None if arrivals_us is None
+                  else np.asarray(arrivals_us, np.float64)[cat_aq])
+            lats, _ = self.io.submit_batch_multi(cat_ios, cat_rb, bg_iops,
+                                                 at_us=at)
             np.maximum.at(sm_lat, cat_aq, lats)
         self._io_req = []
         if plan is not None:
@@ -657,12 +698,17 @@ class SDMEmbeddingStore:
                 if k is not None:
                     self.pooled_cache.insert_hashed(k, np.zeros(1, np.float32))
 
-    def _serve_fallback(self, chunk: ColumnarChunk, bg_iops: float
+    def _serve_fallback(self, chunk: ColumnarChunk, bg_iops: float,
+                        arrivals_us: Optional[np.ndarray] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
         """Exact sequential path for eviction-bound chunks (nothing has been
         mutated when this is taken, so it is bit-exact)."""
         self.batch_fallbacks += 1
-        stats = [self.serve_query(r, bg_iops) for r in chunk.requests()]
+        if arrivals_us is None:
+            stats = [self.serve_query(r, bg_iops) for r in chunk.requests()]
+        else:
+            stats = [self.serve_query(r, bg_iops, at_us=float(at))
+                     for r, at in zip(chunk.requests(), arrivals_us)]
         return (np.array([s.sm_time_us for s in stats], np.float64),
                 np.array([s.sm_ios for s in stats], np.int64))
 

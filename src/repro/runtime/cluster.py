@@ -59,6 +59,13 @@ class HostSpec:
     # prices the *full* model while the traffic (hit rates, latency shape)
     # still comes from simulation.
     demand_scale: float = 1.0
+    # Device-plane latency mode: "analytic" (closed-form means, bit-stable
+    # default) or "sampled" (event-driven DeviceSim queues). ``tuning`` is a
+    # devices.DeviceTuning (§4.1 knobs), ``update`` a devices.UpdateSpec
+    # (background model-refresh write plane) — both sampled-mode only.
+    latency_mode: str = "analytic"
+    tuning: object = None
+    update: object = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +91,11 @@ class HostReport:
     feasible_qps: float                    # simulation-level Eq. 5
     power: float                           # normalized host power
     batch_fallbacks: int = 0               # exact-sequential chunk fallbacks
+    # Eq. 5 judged at the p99 latency instead of the mean: the feasible QPS
+    # once the tail (sampled device plane: queueing collapse, GC/write
+    # interference) is what must clear the budget. Equals feasible_qps's
+    # shape in analytic mode, where the latency samples carry no tail.
+    feasible_qps_p99: float = 0.0
 
 
 @dataclasses.dataclass
@@ -139,7 +151,10 @@ class HostSim:
             SDMConfig(fm_cache_bytes=spec.fm_cache_bytes,
                       pooled_cache_bytes=spec.pooled_cache_bytes,
                       placement=place, num_devices=spec.num_devices,
-                      item_time_us=item_us),
+                      item_time_us=item_us,
+                      latency_mode="analytic" if dram_only
+                      else spec.latency_mode,
+                      tuning=spec.tuning, update=spec.update, sim_seed=seed),
             seed=seed)
         self.sched = ServeScheduler(self.store, ServeConfig(
             item_compute_us=item_us, latency_target_us=latency_target_us))
@@ -213,6 +228,11 @@ class HostSim:
         self.store.batch_fallbacks = 0
         if self.store.pooled_cache is not None:
             self.store.pooled_cache.hits = self.store.pooled_cache.misses = 0
+        if self.store.io.sim is not None:
+            # sampled device plane: the measurement replay starts at the
+            # trace's first arrival again, so the queues must not carry the
+            # warmup pass's clock (cache state above is kept, as always)
+            self.store.io.sim.reset_clock()
         self.sched = ServeScheduler(self.store, self.sched.cfg)
 
     def report(self, duration_us: float) -> HostReport:
@@ -221,9 +241,11 @@ class HostSim:
         spec = self.spec
         queries = len(self.sched.p_lat) + self.sched.deferred
         lat_based = self.sched.qps_at_latency()
+        p99_based = self.sched.qps_at_latency(at_percentile=99.0)
         if spec.device is None or ios == 0 or queries == 0:
             occ = 0.0
             feasible = lat_based
+            feasible_p99 = p99_based
         else:
             dev = DEVICES[spec.device]
             envelope = dev.iops_max * spec.num_devices
@@ -240,13 +262,16 @@ class HostSim:
             compute = host_compute_qps(spec.host)
             feasible = min(cap, compute) if lat_based <= 0 \
                 else min(lat_based, cap)
+            feasible_p99 = min(cap, compute) if p99_based <= 0 \
+                else min(p99_based, cap)
         return HostReport(
             name=spec.name, queries=queries,
             p50_us=self.sched.percentile(50), p95_us=self.sched.percentile(95),
             p99_us=self.sched.percentile(99), deferred=self.sched.deferred,
             sm_ios=ios, achieved_iops=iops, iops_occupancy=occ,
             feasible_qps=feasible, power=spec.host.power,
-            batch_fallbacks=self.store.batch_fallbacks)
+            batch_fallbacks=self.store.batch_fallbacks,
+            feasible_qps_p99=feasible_p99)
 
 
 class ClusterSim:
@@ -311,20 +336,27 @@ class ClusterSim:
                 if warmup:
                     # warmup leaves bg-independent state: later passes
                     # restore the pass-1 snapshot instead of replaying
+                    # (analytic only — snapshots don't carry DeviceSim
+                    # queue/RNG state, so sampled hosts replay the warmup)
                     if warm_snaps[h] is not None:
                         sim.restore(warm_snaps[h])
                     else:
                         sim.run_trace(subsets[h], self.cfg.chunk,
                                       bg.get(spec.name, 0.0), columnar)
-                        if columnar and n_passes > 1:
+                        if columnar and n_passes > 1 and \
+                                spec.latency_mode != "sampled":
                             warm_snaps[h] = sim.snapshot()
                     sim.reset_measurement()
                 sim.run_trace(subsets[h], self.cfg.chunk,
                               bg.get(spec.name, 0.0), columnar)
                 sims.append(sim)
             if p < passes - 1:    # feed measured IOPS into the next pass
+                # sampled hosts already queue their own load in DeviceSim —
+                # feeding it back as background would double-count it, so
+                # self-consistency passes only apply to analytic hosts
                 bg = {s.spec.name: ext.get(s.spec.name, 0.0)
-                      + s.report(trace.duration_us).achieved_iops
+                      + (0.0 if s.spec.latency_mode == "sampled"
+                         else s.report(trace.duration_us).achieved_iops)
                       for s in sims if s is not None}
         reports = [sim.report(trace.duration_us) if sim is not None
                    else HostReport(spec.name, 0, 0.0, 0.0, 0.0, 0, 0, 0.0,

@@ -127,7 +127,8 @@ class ServeScheduler:
             raise ValueError(
                 f"arrivals_us has {len(arrivals_us)} entries for "
                 f"{len(requests_list)} requests")
-        stats = self.store.serve_batch(requests_list, bg_iops)
+        stats = self.store.serve_batch(requests_list, bg_iops,
+                                       arrivals_us=arrivals_us)
         if arrivals_us is None:
             return [self._admit(qs) for qs in stats]
         return [self._admit(qs, at) for qs, at in zip(stats, arrivals_us)]
@@ -145,7 +146,8 @@ class ServeScheduler:
             raise ValueError(
                 f"arrivals_us has {len(arrivals_us)} entries for "
                 f"{len(requests_list)} requests")
-        stats = self.store.serve_batch_dict(requests_list, bg_iops)
+        stats = self.store.serve_batch_dict(requests_list, bg_iops,
+                                            arrivals_us=arrivals_us)
         if arrivals_us is None:
             return [self._admit(qs) for qs in stats]
         return [self._admit(qs, at) for qs, at in zip(stats, arrivals_us)]
@@ -157,12 +159,16 @@ class ServeScheduler:
         ``SDMEmbeddingStore.serve_columnar`` and the admission ledger retires
         vectorized (:meth:`_admit_chunk`). Identical results to
         :meth:`serve_batch` on the chunk's dict view; ``collect=False``
-        skips building the per-query ``QueryResult`` list."""
+        skips building the per-query ``QueryResult`` list. ``arrivals_us``
+        also flows into the data plane, where the sampled device queues
+        (``latency_mode="sampled"``) serve each query's IO at its real
+        arrival (the analytic plane ignores it)."""
         if arrivals_us is not None and len(arrivals_us) != chunk.n_queries:
             raise ValueError(
                 f"arrivals_us has {len(arrivals_us)} entries for "
                 f"{chunk.n_queries} requests")
-        sm_time, sm_ios = self.store.serve_columnar(chunk, bg_iops)
+        sm_time, sm_ios = self.store.serve_columnar(chunk, bg_iops,
+                                                    arrivals_us=arrivals_us)
         return self._admit_chunk(sm_time, sm_ios, arrivals_us, collect)
 
     def serve_trace(self, trace, chunk: int = 32, bg_iops: float = 0.0,
@@ -274,17 +280,25 @@ class ServeScheduler:
     # -- reporting ------------------------------------------------------------
 
     def percentile(self, p: float) -> float:
-        if not self.p_lat:
+        """Latency percentile over the sample buffer; defined (0.0) when no
+        query has been admitted yet — an idle host reports zeros, it does not
+        raise. ``len()`` (not truthiness) so a numpy-array buffer works too."""
+        if len(self.p_lat) == 0:
             return 0.0
         return float(np.percentile(np.asarray(self.p_lat), p))
 
-    def qps_at_latency(self, target_us: Optional[float] = None, p: float = 95.0) -> float:
+    def qps_at_latency(self, target_us: Optional[float] = None,
+                       at_percentile: Optional[float] = None) -> float:
         """Feasible QPS: fraction of queries meeting the latency target scaled
-        by the ideal service rate (simulation-level Eq. 5)."""
+        by the ideal service rate (simulation-level Eq. 5). Defined (0.0) on
+        an empty sample buffer. ``at_percentile`` judges the service rate at
+        that latency percentile instead of the mean — feasibility at p99
+        prices the tail a mean-based Eq. 5 cannot see (sampled device plane)."""
         target = target_us or self.cfg.latency_target_us
-        if not self.p_lat:
+        if len(self.p_lat) == 0:
             return 0.0
         lat = np.asarray(self.p_lat)
         meeting = (lat <= target).mean()
-        mean_lat = lat.mean()
-        return float(meeting * 1e6 / max(mean_lat, 1.0))
+        ref_lat = (lat.mean() if at_percentile is None
+                   else float(np.percentile(lat, at_percentile)))
+        return float(meeting * 1e6 / max(ref_lat, 1.0))

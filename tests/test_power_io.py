@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+from hyp_compat import given, settings, st
+
 from repro.core.io_sim import DEVICES, IOEngine, IOQueueConfig, required_iops
 from repro.core.power import (HW_AN, HW_AO, HW_L, HW_S, HW_SS, Workload,
                               m3_ssd_provisioning, multitenancy_power,
@@ -80,3 +82,60 @@ def test_endurance_update_interval():
     dev = DEVICES["nand_flash"]
     days = dev.update_interval_days(model_size_gb=1000, capacity_gb=2000)
     assert days == pytest.approx(0.1)  # 1TB model, 5 DWPD x 2TB
+
+
+# -- property-based IO-model invariants (hypothesis when installed, plus an
+# -- always-on seeded sweep so the properties hold in bare containers too) ----
+
+
+def _check_latency_monotone(dev, rho1, rho2, out1, out2):
+    """Loaded latency is nondecreasing in utilization and in queue depth."""
+    lo, hi = sorted((rho1, rho2))
+    o_lo, o_hi = sorted((out1, out2))
+    iops = np.array([lo, hi]) * dev.iops_max
+    assert dev.loaded_latency_us(iops[0], o_lo) <= \
+        dev.loaded_latency_us(iops[1], o_lo)
+    assert dev.loaded_latency_us(iops[0], o_lo) <= \
+        dev.loaded_latency_us(iops[0], o_hi)
+    assert dev.loaded_latency_us(iops[0], 1) >= dev.base_latency_us
+
+
+def _check_update_interval(dev, model_gb, cap_gb):
+    """Endurance math: interval scales linearly in model size, inversely in
+    DWPD x capacity; zero-endurance devices report 0 (n/a)."""
+    days = dev.update_interval_days(model_gb, cap_gb)
+    if not dev.endurance_dwpd:
+        assert days == 0.0
+        return
+    assert days == pytest.approx(model_gb / (dev.endurance_dwpd * cap_gb))
+    assert dev.update_interval_days(2 * model_gb, cap_gb) == \
+        pytest.approx(2 * days)
+    assert dev.update_interval_days(model_gb, 2 * cap_gb) == \
+        pytest.approx(days / 2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(rho1=st.floats(0.0, 0.999), rho2=st.floats(0.0, 0.999),
+       out1=st.integers(1, 4096), out2=st.integers(1, 4096))
+def test_loaded_latency_monotone_property(rho1, rho2, out1, out2):
+    for dev in DEVICES.values():
+        _check_latency_monotone(dev, rho1, rho2, out1, out2)
+
+
+@settings(max_examples=60, deadline=None)
+@given(model_gb=st.floats(1.0, 1e5), cap_gb=st.floats(64.0, 1e4))
+def test_update_interval_property(model_gb, cap_gb):
+    for dev in DEVICES.values():
+        _check_update_interval(dev, model_gb, cap_gb)
+
+
+def test_io_model_properties_seeded_sweep():
+    rng = np.random.default_rng(42)
+    for _ in range(200):
+        rho1, rho2 = rng.uniform(0.0, 0.999, 2)
+        out1, out2 = rng.integers(1, 4096, 2)
+        model_gb = rng.uniform(1.0, 1e5)
+        cap_gb = rng.uniform(64.0, 1e4)
+        for dev in DEVICES.values():
+            _check_latency_monotone(dev, rho1, rho2, int(out1), int(out2))
+            _check_update_interval(dev, model_gb, cap_gb)
