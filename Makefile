@@ -1,7 +1,7 @@
 PYTHONPATH := src:.
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench-smoke bench-json docs-check check
+.PHONY: test test-fast bench-smoke bench-json bench-guard docs-check check
 
 # the full suite, slow markers included (plain `pytest -x -q` — the tier-1
 # invocation — skips slow tests so it stays well under 5 minutes)
@@ -26,6 +26,11 @@ bench-smoke:
 bench-json:
 	$(PY) benchmarks/run.py --json BENCH_serve.json \
 		--only serve_batched,perf_trace,scenarios,device_tail
+
+# perf guard: fail if the warm columnar us/query regresses more than 2x
+# against the latest perf_trace entry committed in BENCH_serve.json
+bench-guard:
+	$(PY) tools/bench_guard.py
 
 docs-check:
 	$(PY) tools/docs_check.py

@@ -1,0 +1,57 @@
+"""cProfile the warm columnar serve hot path — data for the next perf PR.
+
+Profiles one warm ``ClusterSim.run(passes=2, warmup=True)`` replay of the
+``perf_trace`` acceptance workload (after an unprofiled run has populated
+the trace's grouping/plan-factor caches, i.e. the steady-state regime the
+us/query number measures) and prints the top-N functions by cumulative and
+by self time. Future perf work should start from this table instead of
+guesses.
+
+Run:   PYTHONPATH=src:. python benchmarks/profile_trace.py [--top N]
+                                                           [--queries N]
+Also exposed as ``run()`` so it can be driven programmatically.
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import dataclasses
+import io
+import pstats
+
+from repro.runtime.cluster import ClusterSim
+from repro.workloads import ARCHETYPES, build_trace
+
+
+def run(num_queries: int = 20_000, top: int = 25,
+        out=None) -> pstats.Stats:
+    from benchmarks.perf_trace import _cluster
+    trace = build_trace(dataclasses.replace(
+        ARCHETYPES["zipf_steady"], num_queries=num_queries))
+    cluster: ClusterSim = _cluster()
+    cluster.run(trace, passes=2, warmup=True)    # warm the caches unprofiled
+    prof = cProfile.Profile()
+    prof.enable()
+    cluster.run(trace, passes=2, warmup=True)
+    prof.disable()
+    buf = out or io.StringIO()
+    stats = pstats.Stats(prof, stream=buf).strip_dirs()
+    for order in ("cumulative", "tottime"):
+        buf.write(f"\n== top {top} by {order} "
+                  f"({num_queries} queries, warm) ==\n")
+        stats.sort_stats(order).print_stats(top)
+    if out is None:
+        print(buf.getvalue())
+    return stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--queries", type=int, default=20_000)
+    args = ap.parse_args()
+    run(num_queries=args.queries, top=args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,18 +20,48 @@ import traceback
 
 
 def _git_sha() -> str:
+    """Short HEAD sha of the repo this file lives in.
+
+    Runs ``git -C <repo root>`` (the previous cwd-based form recorded
+    "unknown" whenever the benchmarks dir wasn't itself the work tree);
+    when the git binary is missing or refuses (ownership checks in CI
+    sandboxes), falls back to reading ``.git/HEAD``/refs directly."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"],
-            cwd=os.path.dirname(os.path.abspath(__file__)),
-            capture_output=True, text=True, timeout=10).stdout.strip() or "unknown"
+        r = subprocess.run(["git", "-C", root, "rev-parse", "--short", "HEAD"],
+                           capture_output=True, text=True, timeout=10)
+        if r.returncode == 0 and r.stdout.strip():
+            return r.stdout.strip()
     except Exception:  # noqa: BLE001
-        return "unknown"
+        pass
+    try:
+        with open(os.path.join(root, ".git", "HEAD")) as f:
+            head = f.read().strip()
+        if head.startswith("ref:"):
+            ref = head.split(None, 1)[1]
+            ref_path = os.path.join(root, ".git", *ref.split("/"))
+            if os.path.exists(ref_path):
+                with open(ref_path) as f:
+                    return f.read().strip()[:7]
+            with open(os.path.join(root, ".git", "packed-refs")) as f:
+                for line in f:
+                    if line.strip().endswith(ref):
+                        return line.split()[0][:7]
+        elif head:
+            return head[:7]
+    except OSError:
+        pass
+    return "unknown"
 
 
 def _append_json(path: str, results: dict) -> None:
     """Append a (git_sha, generated_unix)-keyed entry, migrating the legacy
-    single-snapshot layout ({generated_unix, results}) into the first entry."""
+    single-snapshot layout ({generated_unix, results}) into the first entry.
+
+    Same-sha re-runs collapse into one entry — suite results are merged so
+    a ``--only`` subset run updates its suites without discarding the rest
+    of the commit's numbers. "unknown" shas are never collapsed (they may
+    be different commits)."""
     data = {"entries": []}
     if os.path.exists(path):
         try:
@@ -46,9 +76,18 @@ def _append_json(path: str, results: dict) -> None:
                     "results": old["results"]}]
         except (json.JSONDecodeError, OSError):
             pass  # unreadable file: start a fresh trajectory
-    data["entries"].append({"git_sha": _git_sha(),
-                            "generated_unix": int(time.time()),
-                            "results": results})
+    sha = _git_sha()
+    entry = {"git_sha": sha, "generated_unix": int(time.time()),
+             "results": results}
+    if sha != "unknown":
+        prior = [e for e in data["entries"] if e.get("git_sha") == sha]
+        if prior:
+            merged = dict(prior[-1].get("results") or {})
+            merged.update(results)
+            entry["results"] = merged
+        data["entries"] = [e for e in data["entries"]
+                           if e.get("git_sha") != sha]
+    data["entries"].append(entry)
     with open(path, "w") as f:
         json.dump(data, f, indent=2, default=str)
 

@@ -83,8 +83,27 @@ class _Grouping:
         t_rank = np.repeat(np.arange(len(self.table_ids), dtype=np.int64),
                            np.diff(self.t_spans))
         self.comb = t_rank * np.int64(n + 1) + self.q_g
+        self._n_queries = n
         self._keys_g: Optional[np.ndarray] = None
         self._hash_g: Optional[np.ndarray] = None
+        self._bounds: Dict[int, np.ndarray] = {}
+
+    def chunk_bounds(self, csize: int) -> np.ndarray:
+        """Grouped-array spans of every uniform chunk of stride ``csize``:
+        ``[T, nchunks+1]`` where chunk ``k`` of table rank ``i`` is the span
+        ``bounds[i, k]:bounds[i, k+1]``. One vectorized ``searchsorted`` over
+        all chunk boundaries replaces the per-chunk pair, so slicing a whole
+        trace into chunks is cache lookups only."""
+        b = self._bounds.get(csize)
+        if b is None:
+            n = self._n_queries
+            edges = np.append(np.arange(0, n, csize, dtype=np.int64), n)
+            t = np.arange(len(self.table_ids), dtype=np.int64) * np.int64(n + 1)
+            b = np.searchsorted(
+                self.comb, (t[:, None] + edges[None, :]).ravel()
+            ).reshape(len(t), len(edges))
+            self._bounds[csize] = b
+        return b
 
     def keys_g(self) -> np.ndarray:
         """Composite row-cache keys per element (``cache_sim.make_row_keys``,
@@ -128,6 +147,10 @@ class ColumnarQueries:
         self._requests = requests
         self._group: Optional[_Grouping] = None
         self._factors: Dict[tuple, Dict[int, tuple]] = {}
+        # cache-effectiveness counter: how many plan factorizations were
+        # actually computed (vs served from ``_factors``) — regression tests
+        # assert replays/repeated cluster runs do not grow it
+        self.factor_builds = 0
 
     # -- construction ---------------------------------------------------------
 
@@ -227,10 +250,31 @@ class ColumnarChunk:
         self._qe = qe
         self._csize = csize
         g = parent.group()
-        n1 = np.int64(parent.n_queries + 1)
-        t = np.arange(len(g.table_ids), dtype=np.int64) * n1
-        self._lo = np.searchsorted(g.comb, t + qs)
-        self._hi = np.searchsorted(g.comb, t + qe)
+        n = parent.n_queries
+        if (csize is not None and 0 < csize and qs % csize == 0
+                and qe == min(qs + csize, n) and n > 0):
+            # uniform chunking: spans come from the whole-trace boundary
+            # table (one searchsorted for every chunk of this stride)
+            b = g.chunk_bounds(csize)
+            k = qs // csize
+            self._lo = b[:, k]
+            self._hi = b[:, k + 1]
+        else:
+            t = np.arange(len(g.table_ids), dtype=np.int64) * np.int64(n + 1)
+            self._lo = np.searchsorted(g.comb, t + qs)
+            self._hi = np.searchsorted(g.comb, t + qe)
+
+    @property
+    def parent(self) -> ColumnarQueries:
+        return self._p
+
+    @property
+    def start(self) -> int:
+        return self._qs
+
+    @property
+    def csize(self) -> Optional[int]:
+        return self._csize
 
     @property
     def n_queries(self) -> int:
@@ -260,7 +304,19 @@ class ColumnarChunk:
             uniq, inv = np.unique(keys_fn(), return_inverse=True)
             fact = {"uniq": uniq, "inv": inv}
             per_chunk[self._qs] = fact
+            self._p.factor_builds += 1
         return fact
+
+    def plan_factor_peek(self, ctids: tuple) -> Optional[dict]:
+        """The cached :meth:`plan_factor` entry, or ``None`` when this chunk
+        has never been factored (never computes anything — the fused serve
+        tiers use it to decide whether a precomputed replay is possible)."""
+        c = self._csize
+        if (c is None or self._qs % c or self._p.n_queries <= c
+                or self._qe != min(self._qs + c, self._p.n_queries)):
+            return None
+        per_chunk = self._p._factors.get((c, ctids))
+        return None if per_chunk is None else per_chunk.get(self._qs)
 
     @property
     def max_segs(self) -> int:

@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -35,7 +36,7 @@ from repro.core.locality import TableMeta, sticky_route
 from repro.core.power import HostConfig
 from repro.core.sdm import QueryStats, SDMConfig, SDMEmbeddingStore
 from repro.runtime.serve_sched import ServeConfig, ServeScheduler
-from repro.workloads.trace import Trace
+from repro.workloads.trace import Trace, concat_traces, slice_trace
 
 
 def host_compute_qps(host: HostConfig) -> float:
@@ -274,6 +275,69 @@ class HostSim:
             feasible_qps_p99=feasible_p99)
 
 
+def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
+                 chunk: int, latency_target_us: float, seed: int,
+                 n_passes: int, warmup: bool, ext_bg: float, columnar: bool,
+                 duration_us: float) -> Tuple[HostReport, np.ndarray]:
+    """All self-consistency passes for one host.
+
+    Hosts are independent given routing: a pass feeds back only the host's
+    *own* measured IOPS as the next pass's background load, so the whole
+    multi-pass loop factors per host — this is what makes
+    ``ClusterSim.run(parallel=...)`` bit-identical to the serial walk. A
+    module-level function (not a closure) so the process pool can pickle it.
+    Returns the final pass's report + latency samples."""
+    bg = ext_bg
+    warm_snap = None
+    sim = None
+    for p in range(n_passes):
+        sim = HostSim(spec, metas, latency_target_us, seed=seed)
+        if warmup:
+            # warmup leaves bg-independent state: later passes restore the
+            # pass-1 snapshot instead of replaying (analytic only —
+            # snapshots don't carry DeviceSim queue/RNG state, so sampled
+            # hosts replay the warmup)
+            if warm_snap is not None:
+                sim.restore(warm_snap)
+            else:
+                sim.run_trace(subset, chunk, bg, columnar)
+                if columnar and n_passes > 1 and \
+                        spec.latency_mode != "sampled":
+                    warm_snap = sim.snapshot()
+            sim.reset_measurement()
+        sim.run_trace(subset, chunk, bg, columnar)
+        if p < n_passes - 1:
+            # sampled hosts already queue their own load in DeviceSim —
+            # feeding it back as background would double-count it, so
+            # self-consistency passes only apply to analytic hosts
+            bg = ext_bg + (0.0 if spec.latency_mode == "sampled"
+                           else sim.report(duration_us).achieved_iops)
+    return (sim.report(duration_us),
+            np.asarray(sim.sched.p_lat, np.float64))
+
+
+def _map_hosts(jobs: List[Tuple[int, tuple]], mode,
+               max_workers: Optional[int]) -> Dict[int, tuple]:
+    """Run ``_host_passes`` jobs across a pool, keyed by host index.
+
+    ``mode`` is ``"thread"``/``True`` (numpy releases the GIL across the
+    vectorized serve sweeps, and nothing is pickled) or ``"process"``
+    (spawn context — a fork would duplicate JAX/XLA's internal threads).
+    Results are reassembled by host index, so report order and the fleet
+    percentile concatenation are independent of completion order."""
+    import concurrent.futures as cf
+    n = max_workers or min(len(jobs), os.cpu_count() or 1)
+    if mode == "process":
+        import multiprocessing as mp
+        pool = cf.ProcessPoolExecutor(max_workers=n,
+                                      mp_context=mp.get_context("spawn"))
+    else:
+        pool = cf.ThreadPoolExecutor(max_workers=n)
+    with pool:
+        futs = {pool.submit(_host_passes, *args): h for h, args in jobs}
+        return {futs[f]: f.result() for f in cf.as_completed(futs)}
+
+
 class ClusterSim:
     """Route a trace across simulated hosts and aggregate fleet metrics."""
 
@@ -287,15 +351,18 @@ class ClusterSim:
 
     # -- routing --------------------------------------------------------------
 
-    def route(self, trace: Trace) -> np.ndarray:
-        """host id per query."""
+    def route(self, trace: Trace, start: int = 0) -> np.ndarray:
+        """host id per query. ``start`` is the global index of the trace's
+        first query — streamed pieces pass their offset so position-based
+        policies (round_robin) route a piece exactly as the materialized
+        trace would; content-based policies ignore it."""
         n_hosts = len(self.specs)
         if self.cfg.routing == "tenant_sticky":
             # a tenant's traffic pins to one host: the working set per host
             # shrinks (Fig. 4c's sticky-routing effect, at tenant granularity)
             return sticky_route(trace.tenant, n_hosts)
         if self.cfg.routing == "round_robin":
-            return np.arange(len(trace), dtype=np.int64) % n_hosts
+            return (start + np.arange(len(trace), dtype=np.int64)) % n_hosts
         if self.cfg.routing == "per_tenant":
             # dedicated hosts: tenant i owns host i (mod N) — the
             # no-co-location baseline of Table 11 (each experimental model
@@ -307,7 +374,8 @@ class ClusterSim:
 
     def run(self, trace: Trace, *, passes: int = 1, warmup: bool = False,
             bg_iops: Optional[Dict[str, float]] = None,
-            columnar: bool = True) -> ClusterReport:
+            columnar: bool = True, parallel=None,
+            max_workers: Optional[int] = None) -> ClusterReport:
         """Simulate the trace. ``passes=2`` makes the device background load
         self-consistent (pass 1 measures per-host IOPS, pass 2 replays with
         that load). ``warmup`` replays the trace once before measuring, so
@@ -316,57 +384,143 @@ class ClusterSim:
         tenants, maintenance IO); measurement passes add the host's own
         measured IOPS on top of it. ``columnar`` selects the CSR fast path
         (bit-identical to the dict path; route-split subsets are built once,
-        so every warmup/pass replay reuses each subset's cached grouping)."""
+        so every warmup/pass replay reuses each subset's cached grouping).
+
+        ``parallel`` runs hosts concurrently (``"thread"``/``True`` or
+        ``"process"``) — bit-identical to the serial walk, because the
+        self-consistency feedback is per-host (see :func:`_host_passes`)."""
         assign = self.route(trace)
         metas = trace.all_metas()
         subsets = [trace.subset(assign == h) for h in range(len(self.specs))]
         ext = dict(bg_iops or {})
-        bg = dict(ext)
-        sims: List[Optional[HostSim]] = []
-        warm_snaps: List[Optional[dict]] = [None] * len(self.specs)
         n_passes = max(1, passes)
+        jobs = [(h, (self.specs[h], subsets[h], metas, self.cfg.chunk,
+                     self.cfg.latency_target_us, self.cfg.seed, n_passes,
+                     warmup, ext.get(self.specs[h].name, 0.0), columnar,
+                     trace.duration_us))
+                for h in range(len(self.specs)) if len(subsets[h])]
+        if parallel and len(jobs) > 1:
+            results = _map_hosts(jobs, parallel, max_workers)
+        else:
+            results = {h: _host_passes(*args) for h, args in jobs}
+        return self._fleet_report(trace.name, results)
+
+    def run_stream(self, stream, *, passes: int = 1, warmup: bool = False,
+                   bg_iops: Optional[Dict[str, float]] = None,
+                   columnar: bool = True) -> ClusterReport:
+        """:meth:`run` for a :class:`~repro.workloads.stream.TraceStream`:
+        serve the spec's queries piece by piece in O(piece) memory, never
+        materializing the trace. Each warmup/measurement replay re-iterates
+        the stream (bit-identical regeneration); hosts advance in lockstep
+        over pieces, each serving its routed slice of the piece.
+
+        Reports are bit-identical to ``run(stream.materialize(), ...)``:
+        pieces preserve each host's query subsequence, the columnar serve
+        plane is chunking-invariant (any chunk split equals the sequential
+        walk exactly), and the trace duration is the last piece's last
+        arrival — the same scalar the materialized trace would report."""
+        n_hosts = len(self.specs)
+        metas = stream.all_metas()
+        ext = dict(bg_iops or {})
+        bg = dict(ext)
+        n_passes = max(1, passes)
+        warm_snaps: List[Optional[dict]] = [None] * n_hosts
+        duration = 0.0
+        sims: List[HostSim] = []
         for p in range(n_passes):
-            sims = []
-            for h, spec in enumerate(self.specs):
-                if not len(subsets[h]):
-                    sims.append(None)          # idle host: nothing to build
-                    continue
-                sim = HostSim(spec, metas, self.cfg.latency_target_us,
-                              seed=self.cfg.seed)
-                if warmup:
-                    # warmup leaves bg-independent state: later passes
-                    # restore the pass-1 snapshot instead of replaying
-                    # (analytic only — snapshots don't carry DeviceSim
-                    # queue/RNG state, so sampled hosts replay the warmup)
+            sims = [HostSim(spec, metas, self.cfg.latency_target_us,
+                            seed=self.cfg.seed) for spec in self.specs]
+            if warmup:
+                # same restore-vs-replay split as _host_passes: hosts with a
+                # pass-1 snapshot restore it; the rest (pass 1, and sampled
+                # hosts on every pass) replay the warmup stream
+                need = [h for h in range(n_hosts) if warm_snaps[h] is None]
+                for h in range(n_hosts):
                     if warm_snaps[h] is not None:
-                        sim.restore(warm_snaps[h])
-                    else:
-                        sim.run_trace(subsets[h], self.cfg.chunk,
-                                      bg.get(spec.name, 0.0), columnar)
-                        if columnar and n_passes > 1 and \
-                                spec.latency_mode != "sampled":
-                            warm_snaps[h] = sim.snapshot()
+                        sims[h].restore(warm_snaps[h])
+                if need:
+                    self._stream_replay(stream, sims, need, bg, columnar)
+                    if columnar and n_passes > 1:
+                        for h in need:
+                            if self.specs[h].latency_mode != "sampled":
+                                warm_snaps[h] = sims[h].snapshot()
+                for sim in sims:
                     sim.reset_measurement()
-                sim.run_trace(subsets[h], self.cfg.chunk,
-                              bg.get(spec.name, 0.0), columnar)
-                sims.append(sim)
-            if p < passes - 1:    # feed measured IOPS into the next pass
-                # sampled hosts already queue their own load in DeviceSim —
-                # feeding it back as background would double-count it, so
-                # self-consistency passes only apply to analytic hosts
-                bg = {s.spec.name: ext.get(s.spec.name, 0.0)
-                      + (0.0 if s.spec.latency_mode == "sampled"
-                         else s.report(trace.duration_us).achieved_iops)
-                      for s in sims if s is not None}
-        reports = [sim.report(trace.duration_us) if sim is not None
+            duration = self._stream_replay(stream, sims, range(n_hosts),
+                                           bg, columnar)
+            if p < n_passes - 1:
+                bg = {spec.name: ext.get(spec.name, 0.0)
+                      + (0.0 if spec.latency_mode == "sampled"
+                         else sims[h].report(duration).achieved_iops)
+                      for h, spec in enumerate(self.specs)}
+        results = {}
+        for h, sim in enumerate(sims):
+            if len(sim.sched.p_lat) + sim.sched.deferred == 0:
+                continue                       # idle host -> placeholder
+            results[h] = (sim.report(duration),
+                          np.asarray(sim.sched.p_lat, np.float64))
+        return self._fleet_report(stream.name, results)
+
+    def _stream_replay(self, stream, sims: List[HostSim], hosts,
+                       bg: Dict[str, float], columnar: bool) -> float:
+        """One replay of the stream for the given host subset. Returns the
+        stream duration (last arrival).
+
+        Each host carries a sub-chunk remainder buffer across pieces, so
+        its serve-chunk boundaries land exactly where a materialized
+        route-split would put them (multiples of ``cfg.chunk`` from the
+        host's first query). Serve *results* are chunking-invariant anyway;
+        the buffer makes boundary-sensitive diagnostics (the
+        ``batch_fallbacks`` counter) match bit-for-bit too. Pending state
+        is O(hosts * (chunk + piece)) — the bounded-memory claim stands."""
+        last = 0.0
+        chunk = self.cfg.chunk
+        active = list(hosts)
+        pend: Dict[int, List[Trace]] = {h: [] for h in active}
+        npend: Dict[int, int] = {h: 0 for h in active}
+        for piece in stream.pieces():
+            assign = self.route(piece.trace, piece.start)
+            for h in active:
+                sub = piece.trace.subset(assign == h)
+                if not len(sub):
+                    continue
+                pend[h].append(sub)
+                npend[h] += len(sub)
+                if npend[h] < chunk:
+                    continue
+                merged = concat_traces(pend[h])
+                cut = (npend[h] // chunk) * chunk
+                ready = merged if cut == npend[h] \
+                    else slice_trace(merged, 0, cut)
+                sims[h].run_trace(ready, chunk,
+                                  bg.get(self.specs[h].name, 0.0), columnar)
+                # streamed chunks are served once — drop the replay caches
+                # keyed by them or memory grows O(trace), not O(piece)
+                sims[h].store.drop_plan_caches()
+                pend[h] = [] if cut == npend[h] \
+                    else [slice_trace(merged, cut, npend[h])]
+                npend[h] -= cut
+            if len(piece.trace):
+                last = float(piece.trace.arrival_us[-1])
+        for h in active:                       # flush the final short chunk
+            if npend[h]:
+                sims[h].run_trace(concat_traces(pend[h]), chunk,
+                                  bg.get(self.specs[h].name, 0.0), columnar)
+                sims[h].store.drop_plan_caches()
+        return last
+
+    def _fleet_report(self, name: str,
+                      results: Dict[int, tuple]) -> ClusterReport:
+        """Assemble per-host ``(report, p_lat)`` results (keyed by host
+        index) into a ClusterReport; idle hosts get a zero placeholder."""
+        reports = [results[h][0] if h in results
                    else HostReport(spec.name, 0, 0.0, 0.0, 0.0, 0, 0, 0.0,
                                    0.0, 0.0, spec.host.power)
-                   for sim, spec in zip(sims, self.specs)]
-        lat = np.concatenate([np.asarray(s.sched.p_lat) for s in sims
-                              if s is not None and s.sched.p_lat]
-                             or [np.zeros(1)])
+                   for h, spec in enumerate(self.specs)]
+        lat = np.concatenate([results[h][1] for h in sorted(results)
+                              if results[h][1].size] or [np.zeros(1)])
         return ClusterReport(
-            name=trace.name, hosts=reports,
+            name=name, hosts=reports,
             p50_us=float(np.percentile(lat, 50)),
             p95_us=float(np.percentile(lat, 95)),
             p99_us=float(np.percentile(lat, 99)))

@@ -58,6 +58,31 @@ def zipf_indices_drift(rng: np.random.Generator, num_rows: int, alpha: float,
     return (x % np.uint64(num_rows)).astype(np.int64)
 
 
+def zipf_indices_drift_flat(rng: np.random.Generator, num_rows: int,
+                            alpha: float, sizes: np.ndarray,
+                            epochs: np.ndarray,
+                            blend: float = 0.0) -> np.ndarray:
+    """Vectorized :func:`zipf_indices_drift` over many segments at once.
+
+    Segment ``i`` draws ``sizes[i]`` row ids at drift epoch ``epochs[i]``;
+    the result is the flat concatenation (CSR value stream). One ``rng.zipf``
+    call covers the whole batch — the per-block form the streaming trace
+    generator uses instead of ``build_trace``'s per-segment calls (same
+    permutation math, different RNG consumption order).
+    """
+    sizes = np.asarray(sizes, np.int64)
+    tot = int(sizes.sum())
+    if tot == 0:
+        return np.zeros(0, np.int64)
+    ranks = np.minimum(rng.zipf(alpha, size=tot), num_rows) - 1
+    e = np.repeat(np.asarray(epochs, np.uint64), sizes)
+    if blend > 0.0:
+        e = e + (rng.random(tot) < blend)
+    x = ranks.astype(np.uint64) + e * _DRIFT_SALT
+    x = (x * _PERM_MULT) >> np.uint64(17)
+    return (x % np.uint64(num_rows)).astype(np.int64)
+
+
 # -- arrival processes --------------------------------------------------------
 
 
@@ -201,6 +226,40 @@ class Trace:
         return Trace(self.name, self.seed, self.arrival_us[idx],
                      self.tenant[idx], self.tenant_names,
                      self.queries.subset(idx), self.metas)
+
+
+def slice_trace(tr: Trace, a: int, b: int) -> Trace:
+    """Contiguous query-range ``[a, b)`` of a trace as a standalone trace
+    (metas/tenant names shared; the columnar store is gathered)."""
+    return Trace(tr.name, tr.seed, tr.arrival_us[a:b], tr.tenant[a:b],
+                 tr.tenant_names, tr.queries.subset(np.arange(a, b)),
+                 tr.metas)
+
+
+def concat_traces(parts: Sequence[Trace]) -> Trace:
+    """Concatenate traces with the same tenancy/metas along the query axis
+    — the streaming plane's piece-assembly primitive. O(total) array
+    concatenation; CSR offsets are rebased, never recomputed."""
+    if not parts:
+        raise ValueError("concat_traces needs at least one trace")
+    if len(parts) == 1:
+        return parts[0]
+    head = parts[0]
+    qs = [p.queries for p in parts]
+    voff = np.cumsum([0] + [len(q.values) for q in qs])
+    soff = np.cumsum([0] + [len(q.seg_table) for q in qs])
+    seg_offsets = np.concatenate(
+        [qs[0].seg_offsets] + [q.seg_offsets[1:] + voff[i]
+                               for i, q in enumerate(qs) if i])
+    query_seg = np.concatenate(
+        [qs[0].query_seg] + [q.query_seg[1:] + soff[i]
+                             for i, q in enumerate(qs) if i])
+    cq = ColumnarQueries(np.concatenate([q.values for q in qs]), seg_offsets,
+                         np.concatenate([q.seg_table for q in qs]), query_seg)
+    return Trace(head.name, head.seed,
+                 np.concatenate([p.arrival_us for p in parts]),
+                 np.concatenate([p.tenant for p in parts]),
+                 head.tenant_names, cq, head.metas)
 
 
 def windowed_qps(arrival_us: np.ndarray, duration_us: float,

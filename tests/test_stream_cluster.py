@@ -1,0 +1,166 @@
+"""Streaming trace plane + parallel ClusterSim: parity and cache-reuse
+regressions for the fused serve pipeline PR.
+
+* streamed pieces are bit-identical to the materialized trace for every
+  piece size (the fixed-block seeding contract of ``TraceStream``);
+* ``ClusterSim.run_stream`` reports equal ``run(materialize())`` exactly;
+* ``ClusterSim.run(parallel=...)`` (thread and spawn-process pools) equals
+  the serial walk exactly;
+* counter-based guards that plan factorization and the fused replay tiers
+  are actually reused across repeated runs on the same trace (silent
+  cache-key breakage would pass every bit-exactness test while quietly
+  rebuilding everything per call).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.power import HW_SS
+from repro.runtime.cluster import (ClusterConfig, ClusterSim, HostSpec,
+                                   HostSim, homogeneous_cluster)
+from repro.workloads import ARCHETYPES, build_trace
+from repro.workloads.stream import TraceStream
+from repro.workloads.trace import concat_traces, slice_trace
+
+
+def _spec(name="multi_tenant", n=2000):
+    return dataclasses.replace(ARCHETYPES[name], num_queries=n)
+
+
+def _hosts(k=3, cache=8 << 20):
+    return tuple(HostSpec(name=f"h{i}", host=HW_SS, device="nand_flash",
+                          fm_cache_bytes=cache) for i in range(k))
+
+
+def _assert_reports_equal(a, b):
+    assert [dataclasses.asdict(h) for h in a.hosts] == \
+        [dataclasses.asdict(h) for h in b.hosts]
+    assert (a.p50_us, a.p95_us, a.p99_us) == (b.p50_us, b.p95_us, b.p99_us)
+
+
+# -- trace stream -------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["zipf_steady", "zipf_drift", "diurnal",
+                                  "bursty", "multi_tenant"])
+def test_stream_piece_size_invariant(name):
+    spec = _spec(name, n=1500)
+    a = TraceStream(spec, piece=333, block=256).materialize()
+    b = TraceStream(spec, piece=1024, block=256).materialize()
+    for f in ("arrival_us", "tenant"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+    for f in ("values", "seg_offsets", "seg_table", "query_seg"):
+        np.testing.assert_array_equal(getattr(a.queries, f),
+                                      getattr(b.queries, f))
+    assert len(a) == 1500
+    assert np.all(np.diff(a.arrival_us) >= 0)
+
+
+def test_stream_pieces_partition_the_trace():
+    spec = _spec(n=1000)
+    stream = TraceStream(spec, piece=256, block=128)
+    pieces = list(stream.pieces())
+    assert [p.start for p in pieces] == [0, 256, 512, 768]
+    assert [len(p.trace) for p in pieces] == [256, 256, 256, 232]
+    whole = stream.materialize()
+    glued = concat_traces([p.trace for p in pieces])
+    np.testing.assert_array_equal(glued.queries.values, whole.queries.values)
+    np.testing.assert_array_equal(glued.arrival_us, whole.arrival_us)
+
+
+def test_concat_slice_round_trip():
+    tr = TraceStream(_spec(n=300), piece=300, block=64).materialize()
+    parts = [slice_trace(tr, 0, 120), slice_trace(tr, 120, 300)]
+    back = concat_traces(parts)
+    for f in ("values", "seg_offsets", "seg_table", "query_seg"):
+        np.testing.assert_array_equal(getattr(back.queries, f),
+                                      getattr(tr.queries, f))
+    np.testing.assert_array_equal(back.tenant, tr.tenant)
+
+
+def test_stream_rejects_per_tenant_arrivals():
+    from repro.workloads import ArrivalSpec, TenantSpec, WorkloadSpec
+    spec = WorkloadSpec("x", tenants=(
+        TenantSpec("t0", arrival=ArrivalSpec("poisson")),))
+    with pytest.raises(ValueError):
+        TraceStream(spec)
+
+
+# -- streamed serving ---------------------------------------------------------
+
+@pytest.mark.parametrize("routing", ["tenant_sticky", "round_robin",
+                                     "per_tenant"])
+def test_run_stream_matches_materialized(routing):
+    stream = TraceStream(_spec(n=2000), piece=333, block=256)
+    trace = stream.materialize()
+    cfg = ClusterConfig(hosts=_hosts(), routing=routing, chunk=64)
+    want = ClusterSim(cfg).run(trace, passes=2, warmup=True)
+    got = ClusterSim(cfg).run_stream(stream, passes=2, warmup=True)
+    _assert_reports_equal(want, got)
+
+
+def test_run_stream_single_pass_cold():
+    stream = TraceStream(_spec("zipf_steady", n=1200), piece=500, block=128)
+    cfg = ClusterConfig(hosts=_hosts(k=2), routing="round_robin", chunk=32)
+    want = ClusterSim(cfg).run(stream.materialize())
+    got = ClusterSim(cfg).run_stream(stream)
+    _assert_reports_equal(want, got)
+
+
+# -- parallel cluster ---------------------------------------------------------
+
+def test_parallel_thread_matches_serial():
+    trace = build_trace(_spec(n=2000))
+    cfg = ClusterConfig(hosts=_hosts(k=4), routing="round_robin", chunk=64)
+    serial = ClusterSim(cfg).run(trace, passes=2, warmup=True)
+    threaded = ClusterSim(cfg).run(trace, passes=2, warmup=True,
+                                   parallel="thread")
+    _assert_reports_equal(serial, threaded)
+
+
+@pytest.mark.slow
+def test_parallel_process_matches_serial():
+    trace = build_trace(_spec(n=800))
+    cfg = ClusterConfig(hosts=_hosts(k=3), routing="round_robin", chunk=64)
+    serial = ClusterSim(cfg).run(trace, passes=2, warmup=True)
+    procs = ClusterSim(cfg).run(trace, passes=2, warmup=True,
+                                parallel="process", max_workers=2)
+    _assert_reports_equal(serial, procs)
+
+
+# -- cache-reuse counters -----------------------------------------------------
+
+def test_plan_factorization_cached_across_runs():
+    """Repeated ClusterSim.run on the same trace must not re-factor chunk
+    plans: the factorization cache lives on the trace's columnar store and
+    the route-split subsets are rebuilt per run, so the single-host cluster
+    (full-selection subset shares the store) is the regression-sensitive
+    shape."""
+    trace = build_trace(_spec("zipf_steady", n=1500))
+    cluster = homogeneous_cluster(
+        HostSpec("HW-SS", HW_SS, device="nand_flash",
+                 fm_cache_bytes=64 << 20), chunk=64)
+    first = cluster.run(trace, passes=2, warmup=True)
+    built = trace.queries.factor_builds
+    assert built > 0                      # the run factored via the cache
+    second = cluster.run(trace, passes=2, warmup=True)
+    assert trace.queries.factor_builds == built, \
+        "second run re-built chunk plan factorizations (cache key broke)"
+    _assert_reports_equal(first, second)
+
+
+def test_fused_replay_tiers_engage_when_warm():
+    """The second identical replay through one store must be served by the
+    fused resident/virgin tiers (chunk_plan_hits counts chunks that skipped
+    the full probe/commit pipeline)."""
+    trace = build_trace(_spec("zipf_steady", n=1500))
+    spec = HostSpec("HW-SS", HW_SS, device="nand_flash",
+                    fm_cache_bytes=64 << 20)
+    sim = HostSim(spec, trace.all_metas(), 10_000.0)
+    sim.run_trace(trace, 64, 0.0, True)
+    cold_hits = sim.store.chunk_plan_hits
+    sim.run_trace(trace, 64, 0.0, True)
+    warm_hits = sim.store.chunk_plan_hits - cold_hits
+    n_chunks = (len(trace) + 63) // 64
+    assert warm_hits == n_chunks, \
+        f"warm replay used fused tiers for {warm_hits}/{n_chunks} chunks"

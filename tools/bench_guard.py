@@ -1,0 +1,55 @@
+"""CI perf guard: fail when the warm serve path regresses vs BENCH_serve.json.
+
+Runs the ``perf_trace`` acceptance benchmark and compares its warm columnar
+us/query against the most recent committed trajectory entry that carries
+one. CI fails when the measured number exceeds ``--factor`` (default 2x)
+times the committed value — wide enough to absorb runner-speed variance,
+tight enough that an accidental fast-path break (which costs 5-60x, not
+2x) can't land silently. Run via ``make bench-guard``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def committed_us_per_query(path: str) -> float:
+    with open(path) as f:
+        data = json.load(f)
+    for entry in reversed(data.get("entries", [])):
+        result = (entry.get("results") or {}).get("perf_trace") or {}
+        val = result.get("us_per_query")
+        if val is not None:
+            return float(val)
+    raise SystemExit(f"no perf_trace.us_per_query entry in {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--file", default=os.path.join(ROOT, "BENCH_serve.json"))
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="fail when measured > factor * committed")
+    ap.add_argument("--queries", type=int, default=None,
+                    help="override the benchmark's trace length")
+    args = ap.parse_args()
+
+    committed = committed_us_per_query(args.file)
+    sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
+    from benchmarks import perf_trace
+    kw = {} if args.queries is None else {"num_queries": args.queries}
+    measured = float(perf_trace.run(**kw)["us_per_query"])
+
+    budget = args.factor * committed
+    verdict = "OK" if measured <= budget else "REGRESSION"
+    print(f"bench-guard: measured {measured} us/query vs committed "
+          f"{committed} (budget {budget:.2f} = {args.factor}x) -> {verdict}")
+    if measured > budget:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()
