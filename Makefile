@@ -19,6 +19,7 @@ bench-smoke:
 	$(PY) -c "from benchmarks import perf_trace; perf_trace.run(num_queries=2000)"
 	$(PY) -c "from benchmarks import scenarios; scenarios.run(num_queries=64)"
 	$(PY) -c "from benchmarks import device_tail; device_tail.run(num_queries=400)"
+	$(PY) -c "from benchmarks import fleet_ops; fleet_ops.run(num_queries=1000)"
 
 # machine-readable us/query for the serving hot paths -> BENCH_serve.json.
 # Entries are (git_sha, generated_unix)-keyed and APPENDED, so the file

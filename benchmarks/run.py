@@ -103,9 +103,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (depruning, device_tail, fig1_skew, fig3_io,
-                            fig45_locality, fig6_cache_org, interop_warmup,
-                            kernels, perf_trace, scenarios, serve_batched,
-                            table8_power, table9_scaleout,
+                            fig45_locality, fig6_cache_org, fleet_ops,
+                            interop_warmup, kernels, perf_trace, scenarios,
+                            serve_batched, table8_power, table9_scaleout,
                             table11_multitenancy, table34_pooled)
 
     suites = [
@@ -120,6 +120,7 @@ def main() -> None:
         ("table8_power", table8_power.run),
         ("table9_scaleout", table9_scaleout.run),
         ("table11_multitenancy", table11_multitenancy.run),
+        ("fleet_ops", fleet_ops.run),
         ("scenarios", scenarios.run),
         ("depruning", depruning.run),
         ("interop_warmup", interop_warmup.run),

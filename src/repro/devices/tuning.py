@@ -45,6 +45,18 @@ class DeviceTuning:
             out = min(out, self.max_outstanding)
         return max(1, out)
 
+    def degraded(self, max_outstanding: int = 1) -> "DeviceTuning":
+        """The slow-host knob set the control plane swaps in mid-trace
+        (``FailureEvent.slow_tuning``): the §4.1 throttle driven to
+        ``max_outstanding`` (near-serial IO waves — a dying device that
+        still answers, slowly), smoothing and read-priority kept as
+        configured. ``DeviceSim`` reads throttle and read-priority per
+        submission, so the swap takes effect at the next IO; the smoothing
+        token bucket is sized at construction and keeps its original rate."""
+        if max_outstanding < 1:
+            raise ValueError("max_outstanding must be >= 1")
+        return dataclasses.replace(self, max_outstanding=max_outstanding)
+
 
 #: The untuned default: no throttle, no smoothing, firmware-FCFS writes.
 DEFAULT_TUNING = DeviceTuning()

@@ -3,3 +3,9 @@ from repro.runtime.serve_sched import ServeScheduler, ServeConfig  # noqa: F401
 from repro.runtime.engine import DeviceServingEngine, EngineConfig  # noqa: F401
 from repro.runtime.cluster import (ClusterConfig, ClusterReport, ClusterSim,  # noqa: F401
                                    HostSpec, homogeneous_cluster)
+from repro.runtime.control import (AutoscalePolicy, AutoscaleResult,  # noqa: F401
+                                   CapacityPlan, ControlledHost,
+                                   DegradePolicy, FailoverPlan, HostControl,
+                                   autoscale_assign, autoscale_run,
+                                   autoscale_schedule, build_controls,
+                                   plan_capacity, rewrite_assignment)

@@ -35,7 +35,11 @@ from repro.core.io_sim import DEVICES
 from repro.core.locality import TableMeta, sticky_route
 from repro.core.power import HostConfig
 from repro.core.sdm import QueryStats, SDMConfig, SDMEmbeddingStore
+from repro.runtime.control import (ControlledHost, DegradePolicy,
+                                   HostControl, build_controls,
+                                   rewrite_assignment)
 from repro.runtime.serve_sched import ServeConfig, ServeScheduler
+from repro.workloads.failures import FailureSpec
 from repro.workloads.trace import Trace, concat_traces, slice_trace
 
 
@@ -97,6 +101,15 @@ class HostReport:
     # interference) is what must clear the budget. Equals feasible_qps's
     # shape in analytic mode, where the latency samples carry no tail.
     feasible_qps_p99: float = 0.0
+    # Control-plane counters (runtime/control.py); all zero when no
+    # FailureSpec/DegradePolicy is active.
+    crashes: int = 0                       # restarts this host performed
+    failed_over_in: int = 0                # downtime arrivals re-routed here
+    replayed_in: int = 0                   # in-flight ledger replays here
+    stale_served: int = 0                  # queries served from stale rows
+    shed_queries: int = 0                  # queries with pooled lookups shed
+    io_error_retries: int = 0              # transient-error retries paid
+    degraded_chunks: int = 0               # chunks served in degraded mode
 
 
 @dataclasses.dataclass
@@ -113,6 +126,7 @@ class ClusterReport:
     p50_us: float
     p95_us: float
     p99_us: float
+    p999_us: float = 0.0                   # p99.9 — the planner's SLO knob
 
     @property
     def queries(self) -> int:
@@ -126,12 +140,53 @@ class ClusterReport:
     def sim_power(self) -> float:
         return sum(h.power for h in self.hosts)
 
-    def fleet_power(self, demand_qps: float) -> FleetEstimate:
+    @property
+    def deferred(self) -> int:
+        return sum(h.deferred for h in self.hosts)
+
+    # -- control-plane counter rollups (zero when no control is active) --
+
+    @property
+    def crashes(self) -> int:
+        return sum(h.crashes for h in self.hosts)
+
+    @property
+    def failed_over(self) -> int:
+        return sum(h.failed_over_in for h in self.hosts)
+
+    @property
+    def replayed(self) -> int:
+        return sum(h.replayed_in for h in self.hosts)
+
+    @property
+    def stale_served(self) -> int:
+        return sum(h.stale_served for h in self.hosts)
+
+    @property
+    def shed_queries(self) -> int:
+        return sum(h.shed_queries for h in self.hosts)
+
+    @property
+    def io_error_retries(self) -> int:
+        return sum(h.io_error_retries for h in self.hosts)
+
+    @property
+    def degraded_chunks(self) -> int:
+        return sum(h.degraded_chunks for h in self.hosts)
+
+    def fleet_power(self, demand_qps: float,
+                    tail: bool = False) -> FleetEstimate:
         """Eq. 7 from measured traffic: scale the simulated cluster until
         its feasible QPS covers ``demand_qps``. Hosts the routing left idle
-        carry no measured capacity and are excluded from the scaled fleet."""
+        carry no measured capacity and are excluded from the scaled fleet
+        (an all-idle or empty fleet prices to zero rather than dividing by
+        its missing capacity). ``tail=True`` judges capacity at the p99
+        feasible QPS — the planner's SLO-aware scaling."""
         active = [h for h in self.hosts if h.queries > 0]
-        cap = sum(h.feasible_qps for h in active)
+        if not active:
+            return FleetEstimate(hosts=0.0, power=0.0)
+        cap = sum((h.feasible_qps_p99 if tail else h.feasible_qps)
+                  for h in active)
         k = demand_qps / max(cap, 1e-9)
         return FleetEstimate(hosts=k * len(active),
                              power=k * sum(h.power for h in active))
@@ -278,7 +333,9 @@ class HostSim:
 def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
                  chunk: int, latency_target_us: float, seed: int,
                  n_passes: int, warmup: bool, ext_bg: float, columnar: bool,
-                 duration_us: float) -> Tuple[HostReport, np.ndarray]:
+                 duration_us: float,
+                 ctl: Optional[HostControl] = None
+                 ) -> Tuple[HostReport, np.ndarray]:
     """All self-consistency passes for one host.
 
     Hosts are independent given routing: a pass feeds back only the host's
@@ -286,34 +343,55 @@ def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
     multi-pass loop factors per host — this is what makes
     ``ClusterSim.run(parallel=...)`` bit-identical to the serial walk. A
     module-level function (not a closure) so the process pool can pickle it.
-    Returns the final pass's report + latency samples."""
+    Returns the final pass's report + latency samples.
+
+    ``ctl`` (a compiled :class:`~repro.runtime.control.HostControl`) routes
+    every replay through a :class:`ControlledHost` instead of the plain
+    ``run_trace`` walk — crashes, slow windows, error bursts and degrade
+    policy applied per chunk. Failures stay per-host too (the failover
+    rewrite already happened in the routing), so the parallel modes remain
+    bit-identical with a control program active."""
     bg = ext_bg
     warm_snap = None
     sim = None
+    chost = None
     for p in range(n_passes):
         sim = HostSim(spec, metas, latency_target_us, seed=seed)
+        chost = ControlledHost(sim, ctl) if ctl is not None else None
+
+        def _replay():
+            if chost is not None:
+                chost.begin_replay()
+                chost.serve(subset, chunk, bg, columnar)
+            else:
+                sim.run_trace(subset, chunk, bg, columnar)
+
         if warmup:
             # warmup leaves bg-independent state: later passes restore the
             # pass-1 snapshot instead of replaying (analytic only —
             # snapshots don't carry DeviceSim queue/RNG state, so sampled
-            # hosts replay the warmup)
+            # hosts replay the warmup; control programs make the ledger —
+            # and through degrade triggers, the caches — bg-dependent, so
+            # controlled hosts always replay too)
             if warm_snap is not None:
                 sim.restore(warm_snap)
             else:
-                sim.run_trace(subset, chunk, bg, columnar)
-                if columnar and n_passes > 1 and \
+                _replay()
+                if columnar and n_passes > 1 and ctl is None and \
                         spec.latency_mode != "sampled":
                     warm_snap = sim.snapshot()
             sim.reset_measurement()
-        sim.run_trace(subset, chunk, bg, columnar)
+        _replay()
         if p < n_passes - 1:
             # sampled hosts already queue their own load in DeviceSim —
             # feeding it back as background would double-count it, so
             # self-consistency passes only apply to analytic hosts
             bg = ext_bg + (0.0 if spec.latency_mode == "sampled"
                            else sim.report(duration_us).achieved_iops)
-    return (sim.report(duration_us),
-            np.asarray(sim.sched.p_lat, np.float64))
+    rep = sim.report(duration_us)
+    if chost is not None:
+        rep = chost.finalize_report(rep)
+    return (rep, np.asarray(sim.sched.p_lat, np.float64))
 
 
 def _map_hosts(jobs: List[Tuple[int, tuple]], mode,
@@ -375,7 +453,10 @@ class ClusterSim:
     def run(self, trace: Trace, *, passes: int = 1, warmup: bool = False,
             bg_iops: Optional[Dict[str, float]] = None,
             columnar: bool = True, parallel=None,
-            max_workers: Optional[int] = None) -> ClusterReport:
+            max_workers: Optional[int] = None,
+            failures: Optional[FailureSpec] = None,
+            degrade: Optional[DegradePolicy] = None,
+            assign: Optional[np.ndarray] = None) -> ClusterReport:
         """Simulate the trace. ``passes=2`` makes the device background load
         self-consistent (pass 1 measures per-host IOPS, pass 2 replays with
         that load). ``warmup`` replays the trace once before measuring, so
@@ -388,8 +469,40 @@ class ClusterSim:
 
         ``parallel`` runs hosts concurrently (``"thread"``/``True`` or
         ``"process"``) — bit-identical to the serial walk, because the
-        self-consistency feedback is per-host (see :func:`_host_passes`)."""
-        assign = self.route(trace)
+        self-consistency feedback is per-host (see :func:`_host_passes`).
+
+        Control plane: ``failures`` (a ``FailureSpec``) rewrites the
+        routing so crashed hosts' queries fail over to replicas — their
+        in-flight ledger replayed, no query lost — and compiles per-host
+        control programs (crash restarts, slow windows, IO-error bursts);
+        ``degrade`` arms degraded-mode serving on every host. A spec with
+        no events and no policy takes the exact pre-existing code path.
+        ``assign`` overrides the router's host assignment (the autoscaler
+        routes over a time-varying active set); it must map each query to
+        a valid host index. An empty fleet or empty trace returns a
+        well-formed all-idle report instead of raising."""
+        if not self.specs or len(trace) == 0:
+            return self._fleet_report(trace.name, {})
+        if assign is None:
+            assign = self.route(trace)
+        else:
+            assign = np.asarray(assign, np.int64)
+            if len(assign) != len(trace):
+                raise ValueError(
+                    f"assign has {len(assign)} entries for "
+                    f"{len(trace)} queries")
+        names = [s.name for s in self.specs]
+        fo: Dict[str, int] = {}
+        rp: Dict[str, int] = {}
+        active_ctl = (failures is not None and failures.events) \
+            or degrade is not None
+        if failures is not None and failures.events:
+            plan = rewrite_assignment(assign, trace.arrival_us, names,
+                                      failures)
+            assign, fo, rp = plan.assign, plan.failed_over_in, \
+                plan.replayed_in
+        controls = build_controls(names, failures, degrade, self.cfg.seed) \
+            if active_ctl else [None] * len(names)
         metas = trace.all_metas()
         subsets = [trace.subset(assign == h) for h in range(len(self.specs))]
         ext = dict(bg_iops or {})
@@ -397,17 +510,23 @@ class ClusterSim:
         jobs = [(h, (self.specs[h], subsets[h], metas, self.cfg.chunk,
                      self.cfg.latency_target_us, self.cfg.seed, n_passes,
                      warmup, ext.get(self.specs[h].name, 0.0), columnar,
-                     trace.duration_us))
+                     trace.duration_us, controls[h]))
                 for h in range(len(self.specs)) if len(subsets[h])]
         if parallel and len(jobs) > 1:
             results = _map_hosts(jobs, parallel, max_workers)
         else:
             results = {h: _host_passes(*args) for h, args in jobs}
-        return self._fleet_report(trace.name, results)
+        report = self._fleet_report(trace.name, results)
+        for hr in report.hosts:
+            hr.failed_over_in = fo.get(hr.name, 0)
+            hr.replayed_in = rp.get(hr.name, 0)
+        return report
 
     def run_stream(self, stream, *, passes: int = 1, warmup: bool = False,
                    bg_iops: Optional[Dict[str, float]] = None,
-                   columnar: bool = True) -> ClusterReport:
+                   columnar: bool = True,
+                   failures: Optional[FailureSpec] = None,
+                   degrade: Optional[DegradePolicy] = None) -> ClusterReport:
         """:meth:`run` for a :class:`~repro.workloads.stream.TraceStream`:
         serve the spec's queries piece by piece in O(piece) memory, never
         materializing the trace. Each warmup/measurement replay re-iterates
@@ -418,8 +537,21 @@ class ClusterSim:
         pieces preserve each host's query subsequence, the columnar serve
         plane is chunking-invariant (any chunk split equals the sequential
         walk exactly), and the trace duration is the last piece's last
-        arrival — the same scalar the materialized trace would report."""
+        arrival — the same scalar the materialized trace would report.
+        That parity extends to the control plane: the failover rewrite is
+        content/arrival-based (applied per piece it equals the whole-trace
+        rewrite), and each host's control program triggers at chunk
+        boundaries the remainder buffers keep identical."""
         n_hosts = len(self.specs)
+        if n_hosts == 0:
+            return self._fleet_report(stream.name, {})
+        names = [s.name for s in self.specs]
+        active_ctl = (failures is not None and failures.events) \
+            or degrade is not None
+        controls = build_controls(names, failures, degrade, self.cfg.seed) \
+            if active_ctl else [None] * n_hosts
+        fspec = failures if failures is not None and failures.events \
+            else None
         metas = stream.all_metas()
         ext = dict(bg_iops or {})
         bg = dict(ext)
@@ -427,27 +559,38 @@ class ClusterSim:
         warm_snaps: List[Optional[dict]] = [None] * n_hosts
         duration = 0.0
         sims: List[HostSim] = []
+        chosts: List[Optional[ControlledHost]] = [None] * n_hosts
+        fo: Dict[str, int] = {}
+        rp: Dict[str, int] = {}
         for p in range(n_passes):
             sims = [HostSim(spec, metas, self.cfg.latency_target_us,
                             seed=self.cfg.seed) for spec in self.specs]
+            chosts = [ControlledHost(sims[h], controls[h])
+                      if controls[h] is not None else None
+                      for h in range(n_hosts)]
             if warmup:
                 # same restore-vs-replay split as _host_passes: hosts with a
-                # pass-1 snapshot restore it; the rest (pass 1, and sampled
-                # hosts on every pass) replay the warmup stream
+                # pass-1 snapshot restore it; the rest (pass 1, sampled
+                # hosts, and controlled hosts on every pass) replay the
+                # warmup stream
                 need = [h for h in range(n_hosts) if warm_snaps[h] is None]
                 for h in range(n_hosts):
                     if warm_snaps[h] is not None:
                         sims[h].restore(warm_snaps[h])
                 if need:
-                    self._stream_replay(stream, sims, need, bg, columnar)
+                    self._stream_replay(stream, sims, need, bg, columnar,
+                                        chosts, fspec)
                     if columnar and n_passes > 1:
                         for h in need:
-                            if self.specs[h].latency_mode != "sampled":
+                            if self.specs[h].latency_mode != "sampled" \
+                                    and controls[h] is None:
                                 warm_snaps[h] = sims[h].snapshot()
                 for sim in sims:
                     sim.reset_measurement()
+            fo, rp = {}, {}
             duration = self._stream_replay(stream, sims, range(n_hosts),
-                                           bg, columnar)
+                                           bg, columnar, chosts, fspec,
+                                           fo, rp)
             if p < n_passes - 1:
                 bg = {spec.name: ext.get(spec.name, 0.0)
                       + (0.0 if spec.latency_mode == "sampled"
@@ -457,12 +600,22 @@ class ClusterSim:
         for h, sim in enumerate(sims):
             if len(sim.sched.p_lat) + sim.sched.deferred == 0:
                 continue                       # idle host -> placeholder
-            results[h] = (sim.report(duration),
-                          np.asarray(sim.sched.p_lat, np.float64))
-        return self._fleet_report(stream.name, results)
+            rep = sim.report(duration)
+            if chosts[h] is not None:
+                rep = chosts[h].finalize_report(rep)
+            results[h] = (rep, np.asarray(sim.sched.p_lat, np.float64))
+        report = self._fleet_report(stream.name, results)
+        for hr in report.hosts:
+            hr.failed_over_in = fo.get(hr.name, 0)
+            hr.replayed_in = rp.get(hr.name, 0)
+        return report
 
     def _stream_replay(self, stream, sims: List[HostSim], hosts,
-                       bg: Dict[str, float], columnar: bool) -> float:
+                       bg: Dict[str, float], columnar: bool,
+                       chosts: Optional[List] = None,
+                       failures: Optional[FailureSpec] = None,
+                       fo: Optional[Dict[str, int]] = None,
+                       rp: Optional[Dict[str, int]] = None) -> float:
         """One replay of the stream for the given host subset. Returns the
         stream duration (last arrival).
 
@@ -472,14 +625,45 @@ class ClusterSim:
         host's first query). Serve *results* are chunking-invariant anyway;
         the buffer makes boundary-sensitive diagnostics (the
         ``batch_fallbacks`` counter) match bit-for-bit too. Pending state
-        is O(hosts * (chunk + piece)) — the bounded-memory claim stands."""
+        is O(hosts * (chunk + piece)) — the bounded-memory claim stands.
+
+        ``failures`` applies the failover rewrite to each piece's routing
+        (content-based: equals the materialized whole-trace rewrite);
+        ``fo``/``rp`` accumulate the per-host failover/replay counters.
+        ``chosts`` routes a host's serving through its ControlledHost."""
         last = 0.0
         chunk = self.cfg.chunk
         active = list(hosts)
+        names = [s.name for s in self.specs]
+
+        def _serve(h: int, part: Trace) -> None:
+            host_bg = bg.get(self.specs[h].name, 0.0)
+            if chosts is not None and chosts[h] is not None:
+                chosts[h].serve(part, chunk, host_bg, columnar)
+            else:
+                sims[h].run_trace(part, chunk, host_bg, columnar)
+            # streamed chunks are served once — drop the replay caches
+            # keyed by them or memory grows O(trace), not O(piece)
+            sims[h].store.drop_plan_caches()
+
+        if chosts is not None:
+            for h in active:
+                if chosts[h] is not None:
+                    chosts[h].begin_replay()
         pend: Dict[int, List[Trace]] = {h: [] for h in active}
         npend: Dict[int, int] = {h: 0 for h in active}
         for piece in stream.pieces():
             assign = self.route(piece.trace, piece.start)
+            if failures is not None:
+                plan = rewrite_assignment(assign, piece.trace.arrival_us,
+                                          names, failures)
+                assign = plan.assign
+                if fo is not None:
+                    for k, v in plan.failed_over_in.items():
+                        fo[k] = fo.get(k, 0) + v
+                if rp is not None:
+                    for k, v in plan.replayed_in.items():
+                        rp[k] = rp.get(k, 0) + v
             for h in active:
                 sub = piece.trace.subset(assign == h)
                 if not len(sub):
@@ -492,11 +676,7 @@ class ClusterSim:
                 cut = (npend[h] // chunk) * chunk
                 ready = merged if cut == npend[h] \
                     else slice_trace(merged, 0, cut)
-                sims[h].run_trace(ready, chunk,
-                                  bg.get(self.specs[h].name, 0.0), columnar)
-                # streamed chunks are served once — drop the replay caches
-                # keyed by them or memory grows O(trace), not O(piece)
-                sims[h].store.drop_plan_caches()
+                _serve(h, ready)
                 pend[h] = [] if cut == npend[h] \
                     else [slice_trace(merged, cut, npend[h])]
                 npend[h] -= cut
@@ -504,9 +684,7 @@ class ClusterSim:
                 last = float(piece.trace.arrival_us[-1])
         for h in active:                       # flush the final short chunk
             if npend[h]:
-                sims[h].run_trace(concat_traces(pend[h]), chunk,
-                                  bg.get(self.specs[h].name, 0.0), columnar)
-                sims[h].store.drop_plan_caches()
+                _serve(h, concat_traces(pend[h]))
         return last
 
     def _fleet_report(self, name: str,
@@ -523,7 +701,8 @@ class ClusterSim:
             name=name, hosts=reports,
             p50_us=float(np.percentile(lat, 50)),
             p95_us=float(np.percentile(lat, 95)),
-            p99_us=float(np.percentile(lat, 99)))
+            p99_us=float(np.percentile(lat, 99)),
+            p999_us=float(np.percentile(lat, 99.9)))
 
 
 def homogeneous_cluster(spec: HostSpec, *, count: int = 1,

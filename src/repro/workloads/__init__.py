@@ -14,3 +14,5 @@ from repro.workloads.trace import (Trace, TraceChunk, interleave_arrivals,  # no
 from repro.workloads.archetypes import (ARCHETYPES, ArrivalSpec,  # noqa: F401
                                         TenantSpec, WorkloadSpec, build_trace,
                                         tenant_table_metas)
+from repro.workloads.failures import (FailureEvent, FailureSpec,  # noqa: F401
+                                      seeded_failures)

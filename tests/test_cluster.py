@@ -125,3 +125,41 @@ def test_table8_power_ordering_from_traffic():
     assert p_ss.power < p_l.power
     # and the saving lands in the paper's neighborhood (20%)
     assert 0.05 < 1 - p_ss.power / p_l.power < 0.35
+
+
+# -- degenerate fleets and traces ---------------------------------------------
+
+def test_empty_fleet_returns_well_formed_report():
+    rep = ClusterSim(ClusterConfig(hosts=())).run(_trace())
+    assert len(rep.hosts) == 0
+    assert (rep.p50_us, rep.p99_us, rep.p999_us) == (0.0, 0.0, 0.0)
+    assert rep.deferred == 0 and rep.crashes == 0
+    fp = rep.fleet_power(10_000.0)
+    assert (fp.hosts, fp.power) == (0.0, 0.0)
+
+
+def test_empty_trace_returns_well_formed_report():
+    tr = _trace()
+    empty = tr.subset(np.zeros(len(tr), bool))
+    rep = homogeneous_cluster(HostSpec("h", HW_SS, device="nand_flash"),
+                              count=2).run(empty)
+    assert len(rep.hosts) == 2          # idle placeholders, not an exception
+    assert sum(h.queries for h in rep.hosts) == 0
+    assert rep.p99_us == 0.0
+
+
+def test_single_host_fleet_serves_everything():
+    trace = _mt_trace()
+    rep = homogeneous_cluster(HostSpec("h", HW_SS, device="nand_flash"),
+                              count=1).run(trace)
+    assert len(rep.hosts) == 1
+    assert rep.hosts[0].queries == len(trace)
+    assert rep.p50_us <= rep.p99_us <= rep.p999_us
+
+
+def test_fleet_power_all_idle_hosts_is_zero():
+    tr = _trace()
+    rep = homogeneous_cluster(HostSpec("h", HW_SS, device="nand_flash"),
+                              count=2).run(tr.subset(np.zeros(len(tr), bool)))
+    fp = rep.fleet_power(5_000.0)
+    assert (fp.hosts, fp.power) == (0.0, 0.0)

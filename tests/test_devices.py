@@ -177,6 +177,56 @@ def test_smoothing_paces_admissions():
     assert off.smoothing_delay_us == 0.0
 
 
+def test_zero_capacity_token_bucket_disables_pacing():
+    """smoothing_window_us=0 zeroes the bucket depth: pacing is off even
+    with an explicit (absurdly low) smoothing_iops — bit-equal to untuned."""
+    dev = DEVICES["nand_flash"]
+    at = np.zeros(64)
+    n = np.full(64, 32)
+    tuned = DeviceSim(dev, 2, tuning=DeviceTuning(
+        smoothing_window_us=0.0, smoothing_iops=1.0), seed=4)
+    a = tuned.submit_batch(at, n)
+    off = DeviceSim(dev, 2, seed=4)
+    b = off.submit_batch(at, n)
+    np.testing.assert_array_equal(a, b)
+    assert tuned.smoothing_delay_us == 0.0
+
+
+def test_max_outstanding_one_serializes_waves():
+    """Hardest throttle: queue depth 1 turns every submission into per-device
+    serial waves — exact under cv=0, and the knee is never crossed."""
+    dev = dataclasses.replace(DEVICES["nand_flash"], service_cv=0.0)
+    sim = DeviceSim(dev, 2, tuning=DeviceTuning(max_outstanding=1), seed=0)
+    at = np.arange(32, dtype=np.float64) * 1e6   # idle queues between bursts
+    lats = sim.submit_batch(at, np.full(32, 8), 0.0)
+    per_dev = -(-8 // 2)
+    assert np.all(lats == per_dev * dev.loaded_latency_us(0.0, 1))
+    assert sim.depth_collapses == 0
+
+
+def test_read_priority_noop_without_update_stream():
+    """read_priority only reorders reads around background programs; with no
+    update stream there is nothing to suspend — bit-equal to DEFAULT_TUNING."""
+    trace = _bursty_trace(300)
+    base, _ = _serve(trace, "nand_flash")
+    prio, _ = _serve(trace, "nand_flash",
+                     tuning=DeviceTuning(read_priority=True))
+    np.testing.assert_array_equal(base, prio)
+
+
+def test_degraded_tuning_helper():
+    tun = DeviceTuning(smoothing_window_us=500.0, smoothing_iops=2e5,
+                       read_priority=True)
+    slow = tun.degraded()
+    assert slow.max_outstanding == 1
+    assert slow.smoothing_window_us == tun.smoothing_window_us
+    assert slow.read_priority is True
+    assert tun.degraded(4).max_outstanding == 4
+    with pytest.raises(ValueError):
+        tun.degraded(0)
+    assert slow.effective_outstanding(8, 16) == 1
+
+
 # -- write plane ---------------------------------------------------------------
 
 

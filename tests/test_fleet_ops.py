@@ -1,0 +1,441 @@
+"""Fault-injection differential suite for the fleet control plane.
+
+Every degraded path in ``runtime/control.py`` is pinned to a deterministic,
+seeded oracle:
+
+* a zero-failure ``FailureSpec`` equals a vanilla ``ClusterSim.run`` bit
+  for bit (the control plane's do-no-harm contract);
+* failover conserves queries — per-host served counts add back up to the
+  trace, nothing is lost across crash/recovery — and the crashed host is
+  idle during its extended downtime window;
+* with failures, degrade policies and error bursts active, serial ==
+  ``parallel="thread"`` == ``parallel="process"`` reports exactly;
+* IO-error bursts are seeded (identical reports run-to-run);
+* autoscaler hysteresis properties (bounds, cooldown spacing, dead-band
+  constancy) via ``hyp_compat`` with always-on seeded fallbacks;
+* the capacity planner reproduces the Table 8 power ordering at SLO.
+"""
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+
+from repro.core.power import HW_L, HW_SS
+from repro.runtime.cluster import ClusterConfig, ClusterSim, HostSpec, \
+    homogeneous_cluster
+from repro.runtime.control import (AutoscalePolicy, DegradePolicy,
+                                   autoscale_assign, autoscale_run,
+                                   autoscale_schedule, plan_capacity,
+                                   rewrite_assignment)
+from repro.workloads import ARCHETYPES, build_trace
+from repro.workloads.failures import (FailureEvent, FailureSpec,
+                                      seeded_failures)
+
+
+@functools.lru_cache(maxsize=None)
+def _mt_trace(n=2000, seed=0):
+    """Cached: traces are read-only to the serving stack, and sharing one
+    across tests also shares its columnar plan factorizations."""
+    return build_trace(dataclasses.replace(ARCHETYPES["multi_tenant"],
+                                           num_queries=n, seed=seed))
+
+
+def _hosts(k=3, cache=8 << 20):
+    return tuple(HostSpec(name=f"h{i}", host=HW_SS, device="nand_flash",
+                          fm_cache_bytes=cache) for i in range(k))
+
+
+def _cluster(k=3, routing="round_robin", chunk=64):
+    return ClusterSim(ClusterConfig(hosts=_hosts(k), routing=routing,
+                                    chunk=chunk))
+
+
+def _assert_reports_equal(a, b):
+    assert [dataclasses.asdict(h) for h in a.hosts] == \
+        [dataclasses.asdict(h) for h in b.hosts]
+    assert (a.p50_us, a.p95_us, a.p99_us, a.p999_us) == \
+        (b.p50_us, b.p95_us, b.p99_us, b.p999_us)
+
+
+def _crash_spec(trace, host="h1", lo=0.4, hi=0.7, window=0.02):
+    d = trace.duration_us
+    return FailureSpec(events=(FailureEvent(
+        host=host, kind="crash", start_us=lo * d, end_us=hi * d,
+        inflight_window_us=window * d),))
+
+
+# -- zero-failure bit-exactness oracle ----------------------------------------
+
+@pytest.mark.parametrize("kw", [dict(), dict(passes=2, warmup=True)])
+def test_zero_failure_spec_is_bit_exact(kw):
+    trace = _mt_trace(1200 if kw else 2000)
+    sim = _cluster()
+    _assert_reports_equal(sim.run(trace, **kw),
+                          sim.run(trace, failures=FailureSpec(), **kw))
+
+
+# -- failover: no query lost --------------------------------------------------
+
+def test_crash_failover_conserves_queries():
+    trace = _mt_trace()
+    sim = _cluster()
+    fs = _crash_spec(trace)
+    rep = sim.run(trace, failures=fs)
+    assert rep.queries == len(trace), "failover lost queries"
+    assert rep.crashes == 1
+    assert rep.failed_over > 0 and rep.replayed > 0
+    # the re-routed queries landed exactly where the rewrite put them
+    plan = rewrite_assignment(sim.route(trace), trace.arrival_us,
+                              [s.name for s in sim.specs], fs)
+    counts = np.bincount(plan.assign, minlength=len(sim.specs))
+    assert [h.queries for h in rep.hosts] == counts.tolist()
+    # per-tenant conservation across crash/recovery
+    for t in np.unique(trace.tenant):
+        assert int((trace.tenant == t).sum()) == \
+            int(np.bincount(plan.assign[trace.tenant == t]).sum())
+
+
+def test_crashed_host_idle_during_extended_window():
+    trace = _mt_trace()
+    sim = _cluster()
+    fs = _crash_spec(trace)
+    e = fs.events[0]
+    plan = rewrite_assignment(sim.route(trace), trace.arrival_us,
+                              [s.name for s in sim.specs], fs)
+    down = (trace.arrival_us >= e.start_us - e.inflight_window_us) \
+        & (trace.arrival_us < e.end_us)
+    assert not np.any(plan.assign[down] == 1), \
+        "query scheduled on the crashed host inside its downtime window"
+    assert plan.stranded == 0
+    # the failover counters account for exactly the rewritten queries
+    base = sim.route(trace)
+    moved = down & (base == 1)
+    assert sum(plan.failed_over_in.values()) == \
+        int((moved & (trace.arrival_us >= e.start_us)).sum())
+    assert sum(plan.replayed_in.values()) == \
+        int((moved & (trace.arrival_us < e.start_us)).sum())
+
+
+def test_failover_skips_replicas_down_at_the_same_time():
+    """Two hosts down in overlapping windows: queries must land on the one
+    healthy host, never on the other crashed replica."""
+    trace = _mt_trace()
+    sim = _cluster()
+    d = trace.duration_us
+    fs = FailureSpec(events=(
+        FailureEvent(host="h0", kind="crash", start_us=0.4 * d,
+                     end_us=0.6 * d, inflight_window_us=0.01 * d),
+        FailureEvent(host="h1", kind="crash", start_us=0.45 * d,
+                     end_us=0.7 * d, inflight_window_us=0.01 * d)))
+    plan = rewrite_assignment(sim.route(trace), trace.arrival_us,
+                              [s.name for s in sim.specs], fs)
+    both_down = (trace.arrival_us >= 0.45 * d) \
+        & (trace.arrival_us < 0.6 * d)
+    assert np.all(plan.assign[both_down] == 2)
+    rep = sim.run(trace, failures=fs)
+    assert rep.queries == len(trace)
+    assert rep.crashes == 2
+
+
+def test_single_host_fleet_cannot_fail_over_but_loses_nothing():
+    trace = _mt_trace(n=600)
+    sim = _cluster(k=1)
+    rep = sim.run(trace, failures=_crash_spec(trace, host="h0"))
+    assert rep.queries == len(trace)
+    assert rep.failed_over == 0 and rep.crashes == 1
+
+
+# -- seeded failover determinism: serial == thread == process -----------------
+
+def _control_kwargs(trace):
+    d = trace.duration_us
+    fs = FailureSpec(events=(
+        FailureEvent(host="h1", kind="crash", start_us=0.4 * d,
+                     end_us=0.7 * d, inflight_window_us=0.02 * d),
+        FailureEvent(host="h0", kind="slow", start_us=0.1 * d,
+                     end_us=0.25 * d, slow_bg_iops=50_000.0),
+        FailureEvent(host="h2", kind="io_errors", start_us=0.5 * d,
+                     end_us=0.8 * d, error_rate=0.2,
+                     retry_penalty_us=900.0)))
+    deg = DegradePolicy(mode="stale", inflight_hi=8, inflight_lo=2)
+    return dict(failures=fs, degrade=deg)
+
+
+def test_failover_parity_serial_vs_thread():
+    trace = _mt_trace()
+    sim = _cluster(k=4)
+    kw = _control_kwargs(trace)
+    serial = sim.run(trace, passes=2, warmup=True, **kw)
+    threaded = sim.run(trace, passes=2, warmup=True, parallel="thread", **kw)
+    assert serial.crashes == 1 and serial.queries == len(trace)
+    _assert_reports_equal(serial, threaded)
+
+
+@pytest.mark.slow
+def test_failover_parity_serial_vs_process():
+    trace = _mt_trace(n=800)
+    sim = _cluster(k=3)
+    kw = _control_kwargs(trace)
+    serial = sim.run(trace, passes=2, warmup=True, **kw)
+    procs = sim.run(trace, passes=2, warmup=True, parallel="process",
+                    max_workers=2, **kw)
+    _assert_reports_equal(serial, procs)
+
+
+def test_seeded_error_bursts_are_reproducible():
+    trace = _mt_trace()
+    sim = _cluster()
+    d = trace.duration_us
+    fs = FailureSpec(events=(FailureEvent(
+        host="h0", kind="io_errors", start_us=0.1 * d, end_us=0.6 * d,
+        error_rate=0.4, retry_penalty_us=1_500.0),), seed=11)
+    a = sim.run(trace, failures=fs)
+    b = sim.run(trace, failures=fs)
+    assert a.io_error_retries > 0
+    assert a.queries == len(trace)
+    _assert_reports_equal(a, b)
+    # the retry penalty must surface in the latency tail
+    base = sim.run(trace)
+    assert a.p999_us >= base.p999_us
+
+
+def test_slow_window_degrades_the_host():
+    trace = _mt_trace()
+    sim = _cluster()
+    d = trace.duration_us
+    fs = FailureSpec(events=(FailureEvent(
+        host="h0", kind="slow", start_us=0.2 * d, end_us=0.8 * d,
+        slow_bg_iops=2_000_000.0),))
+    base = sim.run(trace).hosts[0]
+    slow = sim.run(trace, failures=fs).hosts[0]
+    assert slow.queries == base.queries   # slow, not re-routed
+    assert slow.p99_us > base.p99_us
+
+
+def test_seeded_failures_generator_deterministic():
+    names = ["h0", "h1", "h2"]
+    a = seeded_failures(names, 2e6, seed=5, mtbf_us=5e5, mttr_us=1e5)
+    b = seeded_failures(names, 2e6, seed=5, mtbf_us=5e5, mttr_us=1e5)
+    c = seeded_failures(names, 2e6, seed=6, mtbf_us=5e5, mttr_us=1e5)
+    assert a == b and a != c
+    assert all(e.start_us < e.end_us <= 2e6 for e in a.events)
+    rep = _cluster().run(_mt_trace(n=600), failures=a)
+    assert rep.queries == 600
+
+
+def test_failure_event_validation():
+    with pytest.raises(ValueError):
+        FailureEvent(host="h", kind="meteor", start_us=0.0, end_us=1.0)
+    with pytest.raises(ValueError):
+        FailureEvent(host="h", kind="crash", start_us=5.0, end_us=5.0)
+    with pytest.raises(ValueError):
+        FailureEvent(host="h", kind="io_errors", start_us=0.0, end_us=1.0,
+                     error_rate=1.5)
+
+
+# -- degraded-mode serving ----------------------------------------------------
+
+def test_degrade_modes_surface_counters():
+    # arrivals hot enough that IOs are still in flight at chunk boundaries
+    spec = ARCHETYPES["multi_tenant"]
+    trace = build_trace(dataclasses.replace(
+        spec, num_queries=2000,
+        arrival=dataclasses.replace(spec.arrival, rate_qps=100_000.0)))
+    sim = _cluster()
+    stale = sim.run(trace, degrade=DegradePolicy(mode="stale",
+                                                 inflight_hi=64,
+                                                 inflight_lo=16))
+    shed = sim.run(trace, degrade=DegradePolicy(mode="shed",
+                                                inflight_hi=64,
+                                                inflight_lo=16))
+    assert stale.stale_served > 0 and stale.shed_queries == 0
+    assert shed.shed_queries > 0 and shed.stale_served == 0
+    assert stale.degraded_chunks > 0
+    assert stale.queries == shed.queries == len(trace)
+    # stale serving completes at the item-compute floor: tail no worse
+    base = sim.run(trace)
+    assert stale.p99_us <= base.p99_us
+
+
+def test_degrade_on_failover_pressure():
+    """Replicas absorbing a crashed host's traffic shed pre-emptively even
+    when their own ledger never crosses the overload threshold."""
+    trace = _mt_trace()
+    sim = _cluster()
+    deg = DegradePolicy(mode="shed", inflight_hi=1 << 30,
+                        inflight_lo=1 << 29, degrade_on_failover=True)
+    rep = sim.run(trace, failures=_crash_spec(trace), degrade=deg)
+    assert rep.shed_queries > 0 and rep.degraded_chunks > 0
+    off = DegradePolicy(mode="shed", inflight_hi=1 << 30,
+                        inflight_lo=1 << 29, degrade_on_failover=False)
+    assert sim.run(trace, failures=_crash_spec(trace),
+                   degrade=off).shed_queries == 0
+
+
+def test_degrade_policy_validation():
+    with pytest.raises(ValueError):
+        DegradePolicy(mode="panic")
+    with pytest.raises(ValueError):
+        DegradePolicy(inflight_hi=1, inflight_lo=2)
+
+
+# -- autoscaler hysteresis properties -----------------------------------------
+
+def _check_autoscale_props(seed: int) -> None:
+    """Bounds, cooldown spacing and dead-band behavior on a randomized
+    arrival vector."""
+    rng = np.random.default_rng(seed)
+    duration = float(rng.uniform(5e5, 2e6))
+    n = int(rng.integers(200, 3000))
+    arr = np.sort(rng.uniform(0.0, duration, size=n))
+    policy = AutoscalePolicy(
+        host_capacity_qps=float(rng.uniform(200, 4000)),
+        window_us=float(rng.uniform(2e4, 2e5)),
+        cooldown_us=float(rng.uniform(0, 5e5)),
+        min_hosts=int(rng.integers(1, 3)),
+        max_hosts=int(rng.integers(3, 9)))
+    sched = autoscale_schedule(arr, duration, policy)
+    assert np.all((sched >= policy.min_hosts) & (sched <= policy.max_hosts))
+    # cooldown: resize instants are spaced >= cooldown_us apart
+    change_w = np.nonzero(np.diff(sched) != 0)[0] + 1
+    gaps = np.diff(change_w) * policy.window_us
+    assert np.all(gaps >= policy.cooldown_us - 1e-9)
+    # determinism
+    np.testing.assert_array_equal(
+        sched, autoscale_schedule(arr, duration, policy))
+    # every query routes inside the window's active set
+    class _T:
+        arrival_us = arr
+        tenant = rng.integers(0, 5, size=n).astype(np.int64)
+    for routing in ("tenant_sticky", "round_robin", "per_tenant"):
+        assign = autoscale_assign(_T, sched, policy, routing)
+        w = np.minimum((arr // policy.window_us).astype(np.int64),
+                       len(sched) - 1)
+        assert np.all(assign < sched[w]) and np.all(assign >= 0)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=30, deadline=None)
+def test_autoscale_props_hypothesis(seed):
+    _check_autoscale_props(seed)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_autoscale_props_seeded(seed):
+    _check_autoscale_props(seed)
+
+
+def test_autoscale_dead_band_holds_steady():
+    """A constant rate inside [low_util, target_util] never resizes."""
+    policy = AutoscalePolicy(host_capacity_qps=1000.0, window_us=50_000.0,
+                             target_util=0.8, low_util=0.3,
+                             initial_hosts=2, max_hosts=4)
+    # 2 hosts * 1000 qps * [0.3, 0.8] => rate in [600, 1600]; use 1000 qps
+    arr = np.arange(0.0, 1e6, 1e3)
+    sched = autoscale_schedule(arr, 1e6, policy)
+    assert np.all(sched == 2)
+
+
+def test_autoscale_scales_up_under_load_and_down_when_quiet():
+    policy = AutoscalePolicy(host_capacity_qps=1000.0, window_us=50_000.0,
+                             cooldown_us=50_000.0, initial_hosts=1,
+                             max_hosts=4)
+    burst = np.arange(0.0, 5e5, 250.0)          # 4000 qps
+    quiet = np.arange(5e5, 1e6, 20_000.0)       # 50 qps
+    sched = autoscale_schedule(np.concatenate([burst, quiet]), 1e6, policy)
+    assert sched.max() > 1                       # grew under the burst
+    assert sched[-1] < sched.max()               # shrank when quiet
+
+
+def test_autoscale_run_meets_slo_with_fewer_host_seconds():
+    trace = build_trace(dataclasses.replace(ARCHETYPES["diurnal"],
+                                            num_queries=4000, seed=2))
+    peak = len(trace) / trace.duration_us * 1e6
+    policy = AutoscalePolicy(host_capacity_qps=peak / 2.0,
+                             window_us=trace.duration_us / 24.0,
+                             cooldown_us=trace.duration_us / 24.0,
+                             initial_hosts=2, max_hosts=4)
+    fleet = _cluster(k=4)
+    res = autoscale_run(fleet, trace, policy)
+    assert res.report.queries == len(trace)
+    assert res.report.p99_us <= 10_000.0
+    assert res.host_seconds < res.static_host_seconds
+    assert res.schedule.max() != res.schedule.min()   # actually reacted
+
+
+def test_autoscale_run_rejects_undersized_cluster():
+    trace = _mt_trace(n=200)
+    with pytest.raises(ValueError):
+        autoscale_run(_cluster(k=2), trace,
+                      AutoscalePolicy(host_capacity_qps=1000.0,
+                                      max_hosts=4))
+
+
+def test_autoscale_policy_validation():
+    with pytest.raises(ValueError):
+        AutoscalePolicy(host_capacity_qps=0.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(host_capacity_qps=1.0, low_util=0.9, target_util=0.5)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(host_capacity_qps=1.0, min_hosts=5, max_hosts=2)
+
+
+# -- capacity planner ---------------------------------------------------------
+
+def _planner_candidates():
+    return {
+        "nand": HostSpec("nand", HW_SS, device="nand_flash",
+                         fm_cache_bytes=8 << 20),
+        "optane": HostSpec("optane",
+                           dataclasses.replace(HW_SS, ssd_kind="optane"),
+                           device="optane_ssd", fm_cache_bytes=8 << 20),
+        "dram": HostSpec("dram", HW_L, device=None),
+    }
+
+
+def test_plan_capacity_reproduces_table8_ordering():
+    """At a met SLO the planner must price HW-SS+Nand under HW-SS+Optane
+    under HW-L (Table 8's ordering), pick nand, and land the mix search on
+    the same corner (power is linear in the demand split)."""
+    trace = _mt_trace(n=1200)
+    plan = plan_capacity(trace, _planner_candidates(),
+                         demand_qps=240 * 1200, slo_us=10_000.0,
+                         passes=1, warmup=False, count=2)
+    by = {o.name: o for o in plan.options}
+    assert all(o.meets_slo for o in plan.options)
+    assert by["nand"].fleet_power < by["optane"].fleet_power \
+        < by["dram"].fleet_power
+    assert plan.best == "nand"
+    assert plan.best_mix == {"nand": 1.0}
+    assert plan.best_power == pytest.approx(by["nand"].fleet_power)
+    # the ~20% saving Table 8 reports for HW-SS+SDM vs HW-L
+    saving = 1.0 - by["nand"].fleet_power / by["dram"].fleet_power
+    assert 0.05 < saving < 0.45
+
+
+def test_plan_capacity_with_failures_still_meets_slo():
+    trace = _mt_trace(n=1200)
+    d = trace.duration_us
+
+    def fail(names):
+        return FailureSpec(events=(FailureEvent(
+            host=names[0], kind="crash", start_us=0.4 * d, end_us=0.6 * d,
+            inflight_window_us=0.01 * d),))
+
+    plan = plan_capacity(trace, _planner_candidates(),
+                         demand_qps=240 * 1200, slo_us=10_000.0,
+                         passes=1, warmup=False, count=2, failures=fail)
+    assert plan.best == "nand"
+    assert all(o.meets_slo for o in plan.options)
+
+
+def test_plan_capacity_infeasible_slo_reports_no_best():
+    trace = _mt_trace(n=400)
+    plan = plan_capacity(trace, {"nand": _planner_candidates()["nand"]},
+                         demand_qps=1e5, slo_us=1.0,
+                         passes=1, warmup=False, count=2)
+    assert plan.best is None and plan.best_mix == {}
+    assert not plan.options[0].meets_slo

@@ -19,7 +19,8 @@ import pytest
 from repro.core.power import HW_SS
 from repro.runtime.cluster import (ClusterConfig, ClusterSim, HostSpec,
                                    HostSim, homogeneous_cluster)
-from repro.workloads import ARCHETYPES, build_trace
+from repro.runtime.control import DegradePolicy
+from repro.workloads import ARCHETYPES, FailureEvent, FailureSpec, build_trace
 from repro.workloads.stream import TraceStream
 from repro.workloads.trace import concat_traces, slice_trace
 
@@ -105,6 +106,48 @@ def test_run_stream_single_pass_cold():
     want = ClusterSim(cfg).run(stream.materialize())
     got = ClusterSim(cfg).run_stream(stream)
     _assert_reports_equal(want, got)
+
+
+# -- degenerate piece sizes ---------------------------------------------------
+
+@pytest.mark.parametrize("piece", [1, 10_000])
+def test_run_stream_degenerate_piece_sizes(piece):
+    """One query per piece, and one piece holding the whole trace, both
+    reduce to the materialized run exactly — chunk boundaries are a property
+    of the per-host remainder buffers, not of how the stream is cut."""
+    stream = TraceStream(_spec(n=300), piece=piece, block=128)
+    trace = stream.materialize()
+    cfg = ClusterConfig(hosts=_hosts(k=2), routing="round_robin", chunk=32)
+    want = ClusterSim(cfg).run(trace, passes=2, warmup=True)
+    got = ClusterSim(cfg).run_stream(stream, passes=2, warmup=True)
+    _assert_reports_equal(want, got)
+    assert sum(h.queries for h in got.hosts) == 300
+    assert sum(h.batch_fallbacks for h in got.hosts) == \
+        sum(h.batch_fallbacks for h in want.hosts)
+
+
+@pytest.mark.parametrize("piece", [1, 10_000])
+def test_run_stream_degenerate_pieces_with_control_plane(piece):
+    """The control plane triggers off chunk start times and arrival content,
+    so crash/degrade counters must also survive any piece cut (asdict in
+    _assert_reports_equal covers crashes/stale_served/failed_over_in/...)."""
+    stream = TraceStream(_spec(n=300), piece=piece, block=128)
+    trace = stream.materialize()
+    t_lo = float(np.percentile(trace.arrival_us, 40))
+    t_hi = float(np.percentile(trace.arrival_us, 70))
+    failures = FailureSpec(events=(
+        FailureEvent(host="h0", kind="crash", start_us=t_lo, end_us=t_hi,
+                     inflight_window_us=2000.0),))
+    degrade = DegradePolicy(mode="stale", inflight_hi=8, inflight_lo=2)
+    cfg = ClusterConfig(hosts=_hosts(k=2), routing="round_robin", chunk=32)
+    want = ClusterSim(cfg).run(trace, passes=2, warmup=True,
+                               failures=failures, degrade=degrade)
+    got = ClusterSim(cfg).run_stream(stream, passes=2, warmup=True,
+                                     failures=failures, degrade=degrade)
+    _assert_reports_equal(want, got)
+    assert got.crashes == 1
+    assert got.failed_over + got.replayed > 0
+    assert sum(h.queries for h in got.hosts) == 300
 
 
 # -- parallel cluster ---------------------------------------------------------
