@@ -26,6 +26,20 @@ def run() -> dict:
     emit("kernel_gather_pool", t_ref, f"ref_us={t_ref:.0f};allclose_err={err:.1e}")
     out["gather_pool_err"] = err
 
+    # per-shard slice of the same gather: an 8-way row-sharded engine hands
+    # each device a R/8-row store and remaps indices locally — same kernel,
+    # an eighth of the working set (the scan a mesh shard runs per step)
+    Rs = R // 8
+    idx_s = idx % Rs
+    t_ref = time_us(lambda: ref.gather_pool_ref(
+        payload[:Rs], scale[:Rs], bias[:Rs], idx_s), iters=20)
+    err = float(jnp.max(jnp.abs(
+        ops.embedding_gather_pool(payload[:Rs], scale[:Rs], bias[:Rs], idx_s)
+        - ref.gather_pool_ref(payload[:Rs], scale[:Rs], bias[:Rs], idx_s))))
+    emit("kernel_gather_pool_shard8", t_ref,
+         f"ref_us={t_ref:.0f};allclose_err={err:.1e}")
+    out["gather_pool_shard8_err"] = err
+
     S, W = 1024, 8
     tt = jnp.asarray(rng.integers(0, 64, (S, W)), jnp.int32)
     tr = jnp.asarray(rng.integers(0, 1 << 20, (S, W)), jnp.int32)

@@ -105,8 +105,9 @@ def main() -> None:
     from benchmarks import (depruning, device_tail, fig1_skew, fig3_io,
                             fig45_locality, fig6_cache_org, fleet_ops,
                             interop_warmup, kernels, perf_trace, scenarios,
-                            serve_batched, table8_power, table9_scaleout,
-                            table11_multitenancy, table34_pooled)
+                            serve_batched, sharded_serve, table8_power,
+                            table9_scaleout, table11_multitenancy,
+                            table34_pooled)
 
     suites = [
         ("serve_batched", serve_batched.run),
@@ -125,6 +126,7 @@ def main() -> None:
         ("depruning", depruning.run),
         ("interop_warmup", interop_warmup.run),
         ("kernels", kernels.run),
+        ("sharded_serve", sharded_serve.run),
     ]
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -23,6 +23,11 @@ import jax
 import jax.numpy as jnp
 
 EMPTY = jnp.int32(-1)
+# Reserved query key that can never match a tag line: tags hold either EMPTY
+# (-1) or real (table >= 0, row >= 0) ids, so probing (NULL, NULL) is a
+# guaranteed miss. The sharded engine remaps keys it does not own to this
+# before the probe, so foreign keys neither hit nor perturb the LRU stamps.
+NULL_KEY = jnp.int32(-2)
 
 MEM_OPT_ROW_LIMIT = 255  # bytes; paper: dim <= 255B -> memory-optimized cache
 MEM_OPT_METADATA_B = 8
@@ -86,15 +91,18 @@ class JaxRowCache:
         values = state["data"][sets, way]                      # [N, D]
         values = jnp.where(hit[:, None], values, 0)
         clock = state["clock"] + 1
-        stamp = state["stamp"].at[sets, way].set(
-            jnp.where(hit, clock, state["stamp"][sets, way]))
+        # miss entries scatter out of bounds (dropped): redirecting them to a
+        # real slot with an old-value write-back races hit updates there
+        stamp = state["stamp"].at[
+            jnp.where(hit, sets, jnp.int32(g.num_sets)), way].set(
+            clock, mode="drop")
         new_state = dict(state, stamp=stamp, clock=clock,
                          hits=state["hits"] + jnp.sum(hit, dtype=jnp.int32),
                          misses=state["misses"] + jnp.sum(~hit, dtype=jnp.int32))
         return values, hit, new_state
 
     def lookup_device(self, state: dict, tables: jax.Array, rows: jax.Array,
-                      *, use_kernel: bool = True
+                      *, use_kernel: bool = True, valid=None
                       ) -> Tuple[jax.Array, jax.Array, dict]:
         """Probe through the ``cache_probe`` Pallas kernel (§4.3 hot path).
 
@@ -102,9 +110,18 @@ class JaxRowCache:
         lines and data block move through VMEM and the hit row is selected
         with a one-hot matmul — while the LRU metadata update (stamps, clock,
         hit counters) stays in plain XLA, matching :meth:`lookup` exactly.
+
+        ``valid`` (bool [N], optional) masks out padded / foreign keys: they
+        are probed as :data:`NULL_KEY` (guaranteed miss, no tag aliasing with
+        ``EMPTY``), never touch the LRU stamps, and count toward neither hits
+        nor misses. The returned ``hit`` is False for invalid entries.
         """
         from repro.kernels import ops
         g = self.geo
+        if valid is not None:
+            valid = jnp.asarray(valid, bool)
+            tables = jnp.where(valid, tables, NULL_KEY)
+            rows = jnp.where(valid, rows, NULL_KEY)
         sets = set_index(tables, rows, g.num_sets)
         values, hit_i = ops.row_cache_probe(
             state["tag_table"], state["tag_row"], state["data"],
@@ -114,18 +131,29 @@ class JaxRowCache:
                  (state["tag_row"][sets] == rows[:, None]))
         way = jnp.argmax(match, axis=1)
         clock = state["clock"] + 1
-        stamp = state["stamp"].at[sets, way].set(
-            jnp.where(hit, clock, state["stamp"][sets, way]))
+        stamp = state["stamp"].at[
+            jnp.where(hit, sets, jnp.int32(g.num_sets)), way].set(
+            clock, mode="drop")
+        counted_hit = hit if valid is None else (hit & valid)
+        counted_miss = (~hit) if valid is None else ((~hit) & valid)
         new_state = dict(state, stamp=stamp, clock=clock,
-                         hits=state["hits"] + jnp.sum(hit, dtype=jnp.int32),
-                         misses=state["misses"] + jnp.sum(~hit, dtype=jnp.int32))
+                         hits=state["hits"] + jnp.sum(counted_hit, dtype=jnp.int32),
+                         misses=state["misses"] + jnp.sum(counted_miss, dtype=jnp.int32))
         return values.astype(self.dtype), hit, new_state
 
     def insert(self, state: dict, tables: jax.Array, rows: jax.Array,
                values: jax.Array, mask=None) -> dict:
         """Insert rows (LRU way eviction). mask=False entries are skipped.
 
-        Duplicate keys in one batch resolve to the last writer (scatter order).
+        New keys landing in the same set within one batch take *distinct*
+        ways: each gets its rank among the batch's new keys for that set and
+        claims the rank-th least-recently-stamped way, exactly what inserting
+        them one at a time would do (``cache_sim.BatchedRowCache.fill`` uses
+        the same rank-within-set rounds). Without this, every cold key picks
+        ``argmin(stamp)`` = way 0 and the scatter's last writer wins, so a
+        batch of N set-colliding misses fills one way instead of N.
+        Duplicate *identical* keys still resolve to the last writer — dedupe
+        upstream (the serving engines mask duplicates before calling this).
         """
         g = self.geo
         if mask is None:
@@ -134,21 +162,37 @@ class JaxRowCache:
         match = ((state["tag_table"][sets] == tables[:, None]) &
                  (state["tag_row"][sets] == rows[:, None]))
         already = jnp.any(match, axis=1)
-        lru_way = jnp.argmin(state["stamp"][sets], axis=1)
-        way = jnp.where(already, jnp.argmax(match, axis=1), lru_way)
-        sets_w = jnp.where(mask, sets, 0)
-        way_w = jnp.where(mask, way, 0)
+        # Rank each new masked key within its set (stable order of appearance):
+        # sort keys by set id, number the positions inside each run.
+        n = tables.shape[0]
+        is_new = mask & ~already
+        rank_key = jnp.where(is_new, sets, jnp.int32(g.num_sets))  # park others
+        order = jnp.argsort(rank_key, stable=True)
+        sorted_sets = rank_key[order]
+        pos = jnp.arange(n, dtype=jnp.int32)
+        run_start = jnp.concatenate(
+            [jnp.ones((1,), bool), sorted_sets[1:] != sorted_sets[:-1]])
+        start_pos = jax.lax.cummax(jnp.where(run_start, pos, 0))
+        rank = jnp.zeros((n,), jnp.int32).at[order].set(pos - start_pos)
+        # way for a new key = its rank-th entry of the set's LRU order (oldest
+        # stamp first); ranks past the associativity wrap — the sequential
+        # equivalent, since rank W would evict rank 0's freshly-filled way.
+        lru_order = jnp.argsort(state["stamp"][sets], axis=1)      # [N, W]
+        way_new = jnp.take_along_axis(
+            lru_order, (rank % g.ways)[:, None], axis=1)[:, 0]
+        way = jnp.where(already, jnp.argmax(match, axis=1), way_new)
+        # Masked-out entries scatter out of bounds and are dropped. (The
+        # previous scheme — redirect them to (0, 0) and write the old value
+        # back — raced real inserts targeting slot (0, 0) in the same
+        # scatter: a later masked element re-wrote the stale EMPTY tag.)
+        sets_w = jnp.where(mask, sets, jnp.int32(g.num_sets))
         clock = state["clock"] + 1
 
-        tt = state["tag_table"].at[sets_w, way_w].set(
-            jnp.where(mask, tables, state["tag_table"][sets_w, way_w]))
-        tr = state["tag_row"].at[sets_w, way_w].set(
-            jnp.where(mask, rows, state["tag_row"][sets_w, way_w]))
-        data = state["data"].at[sets_w, way_w].set(
-            jnp.where(mask[:, None], values.astype(self.dtype),
-                      state["data"][sets_w, way_w]))
-        stamp = state["stamp"].at[sets_w, way_w].set(
-            jnp.where(mask, clock, state["stamp"][sets_w, way_w]))
+        tt = state["tag_table"].at[sets_w, way].set(tables, mode="drop")
+        tr = state["tag_row"].at[sets_w, way].set(rows, mode="drop")
+        data = state["data"].at[sets_w, way].set(
+            values.astype(self.dtype), mode="drop")
+        stamp = state["stamp"].at[sets_w, way].set(clock, mode="drop")
         return dict(state, tag_table=tt, tag_row=tr, data=data,
                     stamp=stamp, clock=clock)
 

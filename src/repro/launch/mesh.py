@@ -35,6 +35,25 @@ def make_host_mesh(model_axis: int = 1):
     return make_mesh_compat((data, model_axis), ("data", "model"))
 
 
+def make_embed_mesh(num_shards: int = 0):
+    """1-D ``('shard',)`` mesh for the sharded embedding store
+    (``runtime.sharded_engine``). Takes the first ``num_shards`` local
+    devices (0 = all); on CPU, ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` makes N host devices available before jax initializes.
+
+    Built from an explicit device array (not ``jax.make_mesh``) so callers
+    can span a strict prefix of the devices — a ClusterSim host that *is* a
+    mesh slice uses fewer shards than the process exposes.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = num_shards or len(devs)
+    if n > len(devs):
+        raise ValueError(f"requested {n} shards, only {len(devs)} devices")
+    return jax.sharding.Mesh(np.array(devs[:n]), ("shard",))
+
+
 # Hardware constants for the roofline (TPU v5e-class chip).
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip

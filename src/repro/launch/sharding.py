@@ -298,6 +298,72 @@ def state_specs(param_sp: dict) -> dict:
             "step": P()}
 
 
+# ---------------------------------------------------------------------------
+# Sharded embedding store (runtime.sharded_engine)
+# ---------------------------------------------------------------------------
+#
+# The quantized backing store is packed host-side into stacked per-shard
+# arrays (leading axis = shard) because embedding tables are ragged — row
+# slices and whole-table assignments are uneven, which GSPMD's even-split
+# NamedSharding cannot express directly. The layout choice lives in the
+# packing + collective:
+#
+# * "row"   — every device owns a row slice of every table; misses resolve
+#             locally and the pooled partials combine with a psum
+#             (all-reduce) over 'shard'.
+# * "table" — every device owns whole tables; pooled outputs are exchanged
+#             with an all-gather and each table's owner column is selected.
+
+EMBED_LAYOUTS = ("row", "table")
+
+
+def embed_store_specs(layout: str) -> dict:
+    """PartitionSpec per leaf of the packed backing-store pytree (leading
+    axis 'shard' everywhere; row/table packing differs host-side, the device
+    placement rule is the same stacked split)."""
+    if layout not in EMBED_LAYOUTS:
+        raise ValueError(f"layout must be one of {EMBED_LAYOUTS}, got {layout!r}")
+    return {
+        "payload": P("shard", None, None),   # [n, local_rows+1, dim] int8
+        "scale": P("shard", None),           # [n, local_rows+1] f32
+        "bias": P("shard", None),            # [n, local_rows+1] f32
+    }
+
+
+def embed_cache_specs() -> dict:
+    """PartitionSpec per leaf of the stacked per-shard row-cache state
+    (every ``JaxRowCache.init()`` leaf gains a leading 'shard' axis)."""
+    return {
+        "tag_table": P("shard", None, None),
+        "tag_row": P("shard", None, None),
+        "data": P("shard", None, None, None),
+        "stamp": P("shard", None, None),
+        "clock": P("shard"),
+        "hits": P("shard"),
+        "misses": P("shard"),
+    }
+
+
+def embed_batch_specs() -> dict:
+    """Specs for the sharded serve step's data flow: the dense index block
+    and its valid mask are replicated (every shard sees the whole batch and
+    serves its owned keys); the pooled output comes back replicated (psum /
+    all-gather already combined it); per-shard miss counts stay sharded so
+    the host can charge each shard's IO queue separately."""
+    return {"idx": P(), "valid": P(), "pooled": P(),
+            "miss": P("shard", None, None)}
+
+
+def embed_store_shardings(mesh, layout: str) -> dict:
+    """NamedSharding tree for device_put of the packed backing store."""
+    return {k: NamedSharding(mesh, s)
+            for k, s in embed_store_specs(layout).items()}
+
+
+def embed_cache_shardings(mesh) -> dict:
+    return {k: NamedSharding(mesh, s) for k, s in embed_cache_specs().items()}
+
+
 def to_shardings(mesh, spec_tree, abstract):
     """PartitionSpec tree -> NamedSharding tree shaped like ``abstract``."""
     def build(s, a):

@@ -1,6 +1,7 @@
 from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401
 from repro.runtime.serve_sched import ServeScheduler, ServeConfig  # noqa: F401
 from repro.runtime.engine import DeviceServingEngine, EngineConfig  # noqa: F401
+from repro.runtime.sharded_engine import ShardedServingEngine  # noqa: F401
 from repro.runtime.cluster import (ClusterConfig, ClusterReport, ClusterSim,  # noqa: F401
                                    HostSpec, homogeneous_cluster)
 from repro.runtime.control import (AutoscalePolicy, AutoscaleResult,  # noqa: F401

@@ -71,6 +71,21 @@ class HostSpec:
     latency_mode: str = "analytic"
     tuning: object = None
     update: object = None
+    # Device plane (runtime/engine.py + runtime/sharded_engine.py): a host
+    # may *be* a mesh slice — ``mesh_shape=(8,)`` serves its routed queries
+    # through a ShardedServingEngine over 8 local jax devices instead of the
+    # single-device engine. None/(1,) means one device. ``shard_layout``
+    # picks the store partitioning ("row" | "table", launch/sharding.py).
+    mesh_shape: Optional[Tuple[int, ...]] = None
+    shard_layout: str = "row"
+
+    @property
+    def mesh_devices(self) -> int:
+        """Number of jax devices this host's engine spans (1 = unsharded)."""
+        n = 1
+        for d in (self.mesh_shape or ()):
+            n *= int(d)
+        return max(1, n)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,6 +125,10 @@ class HostReport:
     shed_queries: int = 0                  # queries with pooled lookups shed
     io_error_retries: int = 0              # transient-error retries paid
     degraded_chunks: int = 0               # chunks served in degraded mode
+    # Device-plane (jax engine) fields; zero unless the host served through
+    # an attached DeviceServingEngine / ShardedServingEngine.
+    mesh_devices: int = 0                  # jax devices the engine spanned
+    engine_hit_rate: float = 0.0           # HBM row-cache hit rate
 
 
 @dataclasses.dataclass
@@ -214,6 +233,41 @@ class HostSim:
             seed=seed)
         self.sched = ServeScheduler(self.store, ServeConfig(
             item_compute_us=item_us, latency_target_us=latency_target_us))
+        self.engine = None               # device plane, see attach_engine
+
+    def attach_engine(self, tables: Dict[int, np.ndarray],
+                      engine_cfg=None):
+        """Build this host's *device-plane* engine over ``tables``
+        ({table_id: [rows, dim] float array}).
+
+        ``mesh_shape=None``/``(1,)`` attaches the single-device
+        :class:`~repro.runtime.engine.DeviceServingEngine`; anything larger
+        attaches a :class:`~repro.runtime.sharded_engine.ShardedServingEngine`
+        over ``prod(mesh_shape)`` local jax devices in the spec's
+        ``shard_layout``. Engine defaults mirror the host's simulated store
+        (FM cache budget -> HBM row-cache budget, device count, item time).
+        Imports are lazy so hosts that never touch the device plane never
+        pull in jax. Returns (and stores) the engine as ``self.engine``.
+        """
+        from repro.runtime.engine import DeviceServingEngine, EngineConfig
+        spec = self.spec
+        if engine_cfg is None:
+            engine_cfg = EngineConfig(
+                hbm_cache_bytes=spec.fm_cache_bytes,
+                num_devices=spec.num_devices,
+                item_time_us=1e6 / host_compute_qps(spec.host),
+                use_kernels=False)
+        dev = DEVICES[spec.device or "nand_flash"]
+        n = spec.mesh_devices
+        if n <= 1:
+            self.engine = DeviceServingEngine(tables, dev, engine_cfg)
+        else:
+            from repro.launch.mesh import make_embed_mesh
+            from repro.runtime.sharded_engine import ShardedServingEngine
+            self.engine = ShardedServingEngine(
+                tables, dev, engine_cfg, mesh=make_embed_mesh(n),
+                layout=spec.shard_layout)
+        return self.engine
 
     def run_trace(self, trace: Trace, chunk: int, bg_iops: float,
                   columnar: bool = True) -> None:
@@ -686,6 +740,61 @@ class ClusterSim:
             if npend[h]:
                 _serve(h, concat_traces(pend[h]))
         return last
+
+    def run_device_plane(self, trace: Trace,
+                         tables: Dict[int, np.ndarray], *,
+                         engine_cfg=None, bg_iops: float = 0.0,
+                         chunk: Optional[int] = None) -> ClusterReport:
+        """Route the trace across hosts and serve each host's subset through
+        its *device-plane* engine (``HostSim.attach_engine``): hosts whose
+        spec carries a ``mesh_shape`` become sharded mesh slices
+        (:class:`~repro.runtime.sharded_engine.ShardedServingEngine`), the
+        rest run the single-device engine. Per-query latency is the engine's
+        Eq. 3 composition (``max(item_time, sm_time)``), so reports are
+        comparable with :meth:`run`'s host-plane numbers on the same trace;
+        ``mesh_devices``/``engine_hit_rate`` carry the device-plane extras.
+
+        ``tables`` maps table_id -> [rows, dim] float array and must cover
+        every table id the trace touches. All hosts in one process share the
+        local jax device pool — on CPU, force it with
+        ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+        if not self.specs or len(trace) == 0:
+            return self._fleet_report(trace.name, {})
+        assign = self.route(trace)
+        metas = trace.all_metas()
+        chunk = chunk or self.cfg.chunk
+        results: Dict[int, tuple] = {}
+        for h, spec in enumerate(self.specs):
+            subset = trace.subset(assign == h)
+            if not len(subset):
+                continue
+            sim = HostSim(spec, metas, self.cfg.latency_target_us,
+                          seed=self.cfg.seed)
+            eng = sim.attach_engine(tables, engine_cfg)
+            lats = []
+            for ch in subset.chunks(chunk):
+                _, sm_t, _ = eng.serve_columnar(ch.columnar, bg_iops)
+                lats.append(np.maximum(eng.cfg.item_time_us, sm_t))
+            lat = (np.concatenate(lats) if lats
+                   else np.zeros(0, np.float64))
+            ios = eng.stats.sm_ios
+            dur = trace.duration_us
+            iops = ios / dur * 1e6 if dur > 0 else 0.0
+            occ = 0.0
+            if spec.device is not None and ios:
+                occ = iops / (DEVICES[spec.device].iops_max
+                              * spec.num_devices)
+            rep = HostReport(
+                name=spec.name, queries=len(subset),
+                p50_us=float(np.percentile(lat, 50)) if lat.size else 0.0,
+                p95_us=float(np.percentile(lat, 95)) if lat.size else 0.0,
+                p99_us=float(np.percentile(lat, 99)) if lat.size else 0.0,
+                deferred=0, sm_ios=ios, achieved_iops=iops,
+                iops_occupancy=occ, feasible_qps=0.0,
+                power=spec.host.power, mesh_devices=spec.mesh_devices,
+                engine_hit_rate=eng.hit_rate)
+            results[h] = (rep, lat)
+        return self._fleet_report(trace.name, results)
 
     def _fleet_report(self, name: str,
                       results: Dict[int, tuple]) -> ClusterReport:

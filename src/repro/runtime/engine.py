@@ -21,6 +21,13 @@ same analytic ``IOEngine`` the host store uses: the whole ``[batch, tables]``
 miss-count block goes through one coalesced ``submit_batch_multi`` call,
 giving per-query latencies under Eq. 3 overlap. On CPU the kernels run in
 interpret mode; on TPU they compile.
+
+Miss accounting mirrors the host plane's unique-miss coalescing
+(``BatchedRowCache.access_batch``): repeated missed ``(table, row)`` keys in
+one batch cost one SM IO — charged to the first occurrence in query order,
+exactly where a sequential run would take the miss before the fill makes
+every later occurrence a hit — and fill the cache once (duplicates are
+masked out of ``cache.insert`` so one scatter can't double-fill an LRU set).
 """
 from __future__ import annotations
 
@@ -32,10 +39,43 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import CacheGeometry, JaxRowCache, dual_cache_geometry
+from repro.core.columnar import ColumnarChunk
 from repro.core.io_sim import DeviceModel, IOEngine, IOQueueConfig
 from repro.core.quant import quantize_rows, row_bytes
 from repro.core.sdm import QueryStats
 from repro.kernels import ops
+
+
+def dense_from_chunk(chunk: ColumnarChunk, table_slot: Dict[int, int],
+                     num_tables: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Columnar (CSR) chunk -> dense ``[B, T, P]`` index block + valid mask.
+
+    ``P`` is the chunk's max pooling length rounded up to a power of two
+    (bounding jit recompiles across chunks); absent/padded positions get
+    index 0 with ``valid=False`` — the device step routes them to the zero
+    sentinel row so they contribute nothing and cost no IO.
+    """
+    B = chunk.n_queries
+    views = chunk.table_views()
+    P = 1
+    for v in views:
+        if len(v.lens):
+            P = max(P, int(v.lens.max()))
+    P = 1 << (P - 1).bit_length()
+    idx = np.zeros((B, num_tables, P), np.int32)
+    valid = np.zeros((B, num_tables, P), bool)
+    for v in views:
+        t = table_slot[v.tid]
+        nseg = len(v.qid)
+        if nseg == 0 or not len(v.vals):
+            continue
+        seg = np.repeat(np.arange(nseg, dtype=np.int64), v.lens)
+        pos = (np.arange(len(v.vals), dtype=np.int64)
+               - np.repeat(v.eoff[:-1], v.lens))
+        b = v.qid[seg]
+        idx[b, t, pos] = v.vals
+        valid[b, t, pos] = True
+    return idx, valid
 
 
 @dataclasses.dataclass
@@ -93,6 +133,8 @@ class DeviceServingEngine:
         self.cache = JaxRowCache(geo)
         self.state = self.cache.init()
         self.io = IOEngine(device, cfg.num_devices, cfg.io_queue)
+        self.stats = QueryStats()        # store-level totals, host-plane shape
+        self.table_slot = {t: i for i, t in enumerate(self.table_ids)}
         self._step = jax.jit(self._make_step())
 
     # -- device step ----------------------------------------------------------
@@ -100,58 +142,118 @@ class DeviceServingEngine:
     def _make_step(self):
         cache, cfg = self.cache, self.cfg
 
-        def step(state, idx):                                # idx [B, T, P]
+        def step(state, idx, valid):                         # idx [B, T, P]
             B, T, P = idx.shape
             tids = jnp.broadcast_to(
                 jnp.arange(T, dtype=jnp.int32)[None, :, None], idx.shape)
             tq = tids.reshape(-1)
             rq = idx.reshape(-1)
+            vq = valid.reshape(-1)
             vals, hit, state = cache.lookup_device(
-                state, tq, rq, use_kernel=cfg.use_kernels)
+                state, tq, rq, use_kernel=cfg.use_kernels, valid=vq)
             # hit-side pool straight from HBM cache data
             pooled_hit = (vals * hit[:, None]).reshape(B, T, P, -1).sum(axis=2)
-            # miss-side pool fused over the quantized backing store; hits are
-            # pointed at the zero sentinel row
+            # miss-side pool fused over the quantized backing store; hits and
+            # padded positions are pointed at the zero sentinel row
             grow = (self.offsets[tids] + idx).reshape(-1)
-            gidx = jnp.where(hit, self.sentinel, grow)
+            gidx = jnp.where(hit | ~vq, self.sentinel, grow)
             gidx = gidx.reshape(B * T, P).astype(jnp.int32)
             pooled_miss = ops.embedding_gather_pool(
                 self.payload, self.scale, self.bias, gidx,
                 use_kernel=cfg.use_kernels).reshape(B, T, -1)
-            # fill: dequantize the fetched rows and insert (LRU eviction)
+            # unique-miss coalescing (host parity): a repeated missed key is
+            # one SM IO and one fill, charged to its first occurrence in
+            # flattened (query, table, position) order — the element a
+            # sequential run would miss on before its fill turns the rest
+            # into hits. Group equal global rows with a stable sort; the
+            # group head is the first occurrence.
+            miss = vq & ~hit
+            gkey = jnp.where(miss, grow, jnp.int32(-1))      # -1: one dead group
+            order = jnp.argsort(gkey, stable=True)
+            ks = gkey[order]
+            head = jnp.concatenate(
+                [jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+            first = jnp.zeros(gkey.shape, bool).at[order].set(head)
+            io_mask = miss & first
+            # fill: dequantize the fetched rows and insert (LRU eviction),
+            # duplicates masked out so one scatter can't double-fill a set
             deq = (self.payload[grow].astype(jnp.float32)
                    * self.scale[grow][:, None] + self.bias[grow][:, None])
-            state = cache.insert(state, tq, rq, deq, mask=~hit)
-            miss_counts = jnp.sum((~hit).reshape(B, T, P), axis=2)
+            state = cache.insert(state, tq, rq, deq, mask=io_mask)
+            miss_counts = jnp.sum(io_mask.reshape(B, T, P), axis=2)
             return state, pooled_hit + pooled_miss, miss_counts
 
         return step
 
     # -- serving --------------------------------------------------------------
 
-    def serve_batch(self, idx: np.ndarray, bg_iops: float = 0.0
+    def serve_batch(self, idx: np.ndarray, bg_iops: float = 0.0,
+                    valid: Optional[np.ndarray] = None
                     ) -> Tuple[np.ndarray, List[QueryStats]]:
         """idx: [B, T, P] int32 of per-table local row ids (T in the order of
-        ``table_ids``). Returns (pooled [B, T, dim] f32, per-query stats)."""
+        ``table_ids``). Returns (pooled [B, T, dim] f32, per-query stats).
+        ``valid`` (bool [B, T, P], optional) masks padded positions out of
+        pooling, caching and IO accounting."""
         idx = np.asarray(idx, np.int32)
-        if (idx < 0).any() or (idx >= self.rows_per_table[None, :, None]).any():
+        if idx.ndim != 3:
+            raise ValueError(f"idx must be [B, T, P], got shape {idx.shape}")
+        if idx.shape[1] != len(self.table_ids):
+            raise ValueError(
+                f"idx has {idx.shape[1]} tables, engine has "
+                f"{len(self.table_ids)}")
+        if valid is None:
+            valid = np.ones(idx.shape, bool)
+        live = np.where(valid, idx, 0)
+        if (live < 0).any() or (live >= self.rows_per_table[None, :, None]).any():
             raise ValueError("row index out of range")
-        state, pooled, miss = self._step(self.state, jnp.asarray(idx))
+        if idx.shape[0] == 0:            # degenerate empty batch: no device
+            return (np.zeros((0, idx.shape[1], self.dim), np.float32), [])
+        state, pooled, miss = self._step(self.state, jnp.asarray(idx),
+                                         jnp.asarray(valid))
         self.state = state
-        miss = np.asarray(miss)                              # [B, T]
+        return np.asarray(pooled), self._account(np.asarray(miss), bg_iops)
+
+    def serve_columnar(self, chunk: ColumnarChunk, bg_iops: float = 0.0
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Serve a columnar (CSR) chunk through the device step — the batched
+        data-plane entry matching ``SDMEmbeddingStore.serve_columnar``.
+        Returns ``(pooled [B, T, dim] f32, sm_time_us [B] f64, sm_ios [B]
+        i64)`` with T in ``table_ids`` order (tables a query does not touch
+        pool to zero)."""
+        T = len(self.table_ids)
+        if chunk.n_queries == 0:
+            return (np.zeros((0, T, self.dim), np.float32),
+                    np.zeros(0, np.float64), np.zeros(0, np.int64))
+        idx, valid = dense_from_chunk(chunk, self.table_slot, T)
+        pooled, stats = self.serve_batch(idx, bg_iops, valid=valid)
+        return (pooled,
+                np.array([s.sm_time_us for s in stats], np.float64),
+                np.array([s.sm_ios for s in stats], np.int64))
+
+    def _account(self, miss: np.ndarray, bg_iops: float) -> List[QueryStats]:
+        """Per-query IO + Eq. 3 latency accounting for a ``[B, T]`` block of
+        deduped miss counts; accumulates store-level ``stats`` exactly like
+        the host plane's ``serve_query`` running totals."""
         # one coalesced submission across all (query, table) pairs — the
         # same cross-table flattening the host plane uses; per-element
         # latency is identical to per-table submit_batch calls
         rb = np.full(miss.size, self.row_bytes, np.int64)
         lats, _ = self.io.submit_batch_multi(miss.reshape(-1), rb, bg_iops)
         sm_lat = lats.reshape(miss.shape).max(axis=1)
-        stats = [QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat[b]),
-                            sm_ios=int(miss[b].sum()),
-                            sm_time_us=float(sm_lat[b]))
-                 for b in range(miss.shape[0])]
-        return np.asarray(pooled), stats
+        stats = []
+        for b in range(miss.shape[0]):
+            # Eq. 3: user-side SM time overlaps item-side compute; only the
+            # excess surfaces — identical to core/sdm.py serve_query
+            q = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat[b]),
+                           sm_ios=int(miss[b].sum()),
+                           sm_time_us=float(sm_lat[b]))
+            self.stats.latency_us += q.latency_us
+            self.stats.sm_ios += q.sm_ios
+            stats.append(q)
+        return stats
 
-    def reference_pool(self, idx: np.ndarray) -> np.ndarray:
+    def reference_pool(self, idx: np.ndarray,
+                       valid: Optional[np.ndarray] = None) -> np.ndarray:
         """Numpy oracle for :meth:`serve_batch`'s pooled output."""
         idx = np.asarray(idx)
         offs = np.asarray(self.offsets)
@@ -160,6 +262,8 @@ class DeviceServingEngine:
         deq = (payload[grow].astype(np.float32)
                * np.asarray(self.scale)[grow][..., None]
                + np.asarray(self.bias)[grow][..., None])
+        if valid is not None:
+            deq = deq * np.asarray(valid)[..., None]
         return deq.sum(axis=2)
 
     # -- reporting ------------------------------------------------------------

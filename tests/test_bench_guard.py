@@ -1,0 +1,68 @@
+"""bench_guard baseline-entry selection (the CI perf guard's anchor).
+
+Regression for the stale-baseline bug: a legacy trajectory entry written
+outside a git checkout carried ``git_sha: "unknown"`` and could be picked
+as the guard's committed number — untied to any commit, so regressions
+were judged against a baseline nobody could bisect to.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+_spec = importlib.util.spec_from_file_location(
+    "bench_guard", os.path.join(ROOT, "tools", "bench_guard.py"))
+bench_guard = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_guard)
+
+
+def _entry(sha, us=None):
+    results = {} if us is None else {"perf_trace": {"us_per_query": us}}
+    return {"git_sha": sha, "results": results}
+
+
+def test_picks_most_recent_entry():
+    e = bench_guard.select_perf_entry(
+        [_entry("aaa", 10.0), _entry("bbb", 20.0)])
+    assert e["git_sha"] == "bbb"
+
+
+def test_skips_unknown_and_empty_sha():
+    entries = [_entry("aaa", 10.0), _entry("unknown", 99.0),
+               _entry("", 98.0), _entry(None, 97.0)]
+    assert bench_guard.select_perf_entry(entries)["git_sha"] == "aaa"
+
+
+def test_duplicate_sha_uses_newest_measurement():
+    """Re-runs append entries; only the newest per commit counts — even
+    when the newest for that SHA carries no perf number."""
+    entries = [_entry("aaa", 10.0), _entry("bbb", 20.0),
+               _entry("bbb", 30.0)]
+    assert bench_guard.select_perf_entry(entries)["results"][
+        "perf_trace"]["us_per_query"] == 30.0
+    # newest 'bbb' has no perf number -> its stale duplicate is NOT used
+    entries = [_entry("aaa", 10.0), _entry("bbb", 20.0), _entry("bbb")]
+    assert bench_guard.select_perf_entry(entries)["git_sha"] == "aaa"
+
+
+def test_no_usable_entry_returns_none_and_exits():
+    assert bench_guard.select_perf_entry([]) is None
+    assert bench_guard.select_perf_entry([_entry("unknown", 5.0)]) is None
+
+
+def test_committed_file_has_usable_baseline(tmp_path):
+    """The repo's committed trajectory must anchor to a real SHA."""
+    path = os.path.join(ROOT, "BENCH_serve.json")
+    val = bench_guard.committed_us_per_query(path)
+    assert val > 0.0
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    assert all(e.get("git_sha") not in bench_guard.BAD_SHAS
+               for e in entries)
+    # and an all-legacy file fails loudly instead of guarding against air
+    bad = tmp_path / "bench.json"
+    bad.write_text(json.dumps({"entries": [_entry("unknown", 5.0)]}))
+    with pytest.raises(SystemExit):
+        bench_guard.committed_us_per_query(str(bad))

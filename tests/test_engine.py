@@ -4,7 +4,10 @@ import numpy as np
 import pytest
 
 from repro.core.io_sim import DEVICES
-from repro.runtime.engine import DeviceServingEngine, EngineConfig
+from repro.core.locality import TableMeta
+from repro.core.sdm import SDMConfig, SDMEmbeddingStore
+from repro.runtime.engine import (DeviceServingEngine, EngineConfig,
+                                  dense_from_chunk)
 
 
 @pytest.fixture(scope="module")
@@ -84,6 +87,100 @@ def test_default_config_not_shared_between_engines():
     assert a.cfg is not b.cfg
     a.cfg.item_time_us = 999.0
     assert b.cfg.item_time_us != 999.0
+
+
+def test_duplicate_misses_cost_one_io():
+    """Regression: repeated missed keys in one batch must cost one SM IO
+    (charged to the first occurrence), not one per occurrence — the
+    double-count broke ``sm_ios`` parity with the host plane's unique-miss
+    coalescing (``BatchedRowCache``)."""
+    rng = np.random.default_rng(5)
+    tables = {0: rng.standard_normal((64, 8)).astype(np.float32)}
+    eng = DeviceServingEngine(tables, DEVICES["nand_flash"],
+                              EngineConfig(hbm_cache_bytes=1 << 20,
+                                           use_kernels=False))
+    # cold cache; query 0 pools row 7 four times, query 1 pools it again
+    idx = np.array([[[7, 7, 7, 7]], [[7, 3, 3, 5]]], np.int32)
+    _, stats = eng.serve_batch(idx)
+    assert stats[0].sm_ios == 1          # row 7 once, not 4x
+    assert stats[1].sm_ios == 2          # rows 3 and 5; row 7 already filled
+    assert eng.io.total_ios == 3
+    # and the fill happened exactly once: everything hits next batch
+    _, warm = eng.serve_batch(idx)
+    assert sum(s.sm_ios for s in warm) == 0
+
+
+def test_engine_matches_host_store_accounting():
+    """Differential vs the host plane on an identical stream: per-query
+    ``sm_ios`` exactly equal, and per-query ``latency_us`` (Eq. 3:
+    ``max(item_time, sm_lat)``) equal too — so are the store-level totals."""
+    rng = np.random.default_rng(7)
+    rows = [200, 150, 300]
+    tables = {t: rng.standard_normal((r, 16)).astype(np.float32)
+              for t, r in enumerate(rows)}
+    eng = DeviceServingEngine(
+        tables, DEVICES["nand_flash"],
+        EngineConfig(hbm_cache_bytes=8 << 20, num_devices=2,
+                     use_kernels=False))
+    metas = [TableMeta(table_id=t, num_rows=r, dim_bytes=eng.row_bytes,
+                       pooling_factor=4, zipf_alpha=1.05, kind="user")
+             for t, r in enumerate(rows)]
+    store = SDMEmbeddingStore(
+        metas, DEVICES["nand_flash"],
+        SDMConfig(fm_cache_bytes=8 << 20, num_devices=2,
+                  item_time_us=eng.cfg.item_time_us))
+    for rep in range(3):
+        idx = np.stack([rng.integers(0, r, (32, 4)) for r in rows],
+                       axis=1).astype(np.int32)
+        _, stats = eng.serve_batch(idx, bg_iops=1e5)
+        host = [store.serve_query({t: idx[b, t] for t in range(3)},
+                                  bg_iops=1e5) for b in range(32)]
+        assert [s.sm_ios for s in stats] == [q.sm_ios for q in host], rep
+        np.testing.assert_allclose([s.latency_us for s in stats],
+                                   [q.latency_us for q in host])
+    assert eng.stats.sm_ios == store.stats.sm_ios
+    np.testing.assert_allclose(eng.stats.latency_us, store.stats.latency_us)
+
+
+def test_degenerate_batches():
+    """B=0, P=1, and pre-serving ``hit_rate`` must not crash."""
+    rng = np.random.default_rng(8)
+    eng = DeviceServingEngine(
+        {0: rng.standard_normal((16, 4)).astype(np.float32)},
+        DEVICES["nand_flash"], EngineConfig(use_kernels=False))
+    assert eng.hit_rate == 0.0                    # no lookups yet
+    pooled, stats = eng.serve_batch(np.zeros((0, 1, 4), np.int32))
+    assert pooled.shape == (0, 1, 4) and stats == []
+    assert eng.stats.sm_ios == 0                  # empty batch costs nothing
+    pooled, stats = eng.serve_batch(np.zeros((2, 1, 1), np.int32))  # P=1
+    assert pooled.shape == (2, 1, 4) and len(stats) == 2
+
+
+def test_valid_mask_and_columnar_entry():
+    """Padded positions (valid=False) pool nothing, cost no IO, and never
+    perturb the cache; serve_columnar round-trips through dense_from_chunk
+    with the same accounting as serve_batch."""
+    from repro.core.columnar import ColumnarQueries
+    rng = np.random.default_rng(9)
+    tables = {3: rng.standard_normal((32, 8)).astype(np.float32),
+              5: rng.standard_normal((48, 8)).astype(np.float32)}
+    eng = DeviceServingEngine(tables, DEVICES["nand_flash"],
+                              EngineConfig(use_kernels=False))
+    reqs = [{3: np.array([1, 2, 3]), 5: np.array([4])},
+            {5: np.array([4, 7, 7, 9, 11])}]       # ragged + a repeat
+    chunk = ColumnarQueries.from_requests(reqs).whole()
+    idx, valid = dense_from_chunk(chunk, eng.table_slot, 2)
+    assert idx.shape[2] == 8                       # P=5 padded to pow2
+    assert valid.sum() == 9
+    pooled, tm, ios = eng.serve_columnar(chunk)
+    np.testing.assert_allclose(pooled, eng.reference_pool(idx, valid),
+                               atol=1e-5)
+    assert ios.tolist() == [4, 3]                  # 7 deduped; 4 re-hits
+    assert int(eng.state["hits"]) + int(eng.state["misses"]) == 9
+    # empty chunk
+    empty = ColumnarQueries.from_requests([]).whole()
+    pooled, tm, ios = eng.serve_columnar(empty)
+    assert pooled.shape == (0, 2, 8) and len(tm) == 0 and len(ios) == 0
 
 
 def test_coalesced_io_matches_per_table_submit():

@@ -1,0 +1,223 @@
+"""Sharded serving engine: mesh-layout parity vs the single-device engine.
+
+The real multi-shard checks run in a SUBPROCESS with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the device count
+must be set before jax initializes; the main test process keeps its single
+CPU device). In-process tests cover the degenerate 1-way mesh, layout
+validation, and the cluster device-plane wiring.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.io_sim import DEVICES
+from repro.launch.mesh import make_embed_mesh
+from repro.launch.sharding import (EMBED_LAYOUTS, embed_batch_specs,
+                                   embed_cache_specs, embed_store_specs)
+from repro.runtime.engine import DeviceServingEngine, EngineConfig
+from repro.runtime.sharded_engine import ShardedServingEngine
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _tables(rng, rows, dim=8):
+    return {t: rng.standard_normal((r, dim)).astype(np.float32)
+            for t, r in enumerate(rows)}
+
+
+def test_layout_and_mesh_validation():
+    rng = np.random.default_rng(0)
+    tables = _tables(rng, [16])
+    with pytest.raises(ValueError):
+        ShardedServingEngine(tables, DEVICES["nand_flash"], layout="diag")
+    from repro.launch.mesh import make_host_mesh
+    with pytest.raises(ValueError):
+        ShardedServingEngine(tables, DEVICES["nand_flash"],
+                             mesh=make_host_mesh())    # axes (data, model)
+    with pytest.raises(ValueError):
+        ShardedServingEngine({}, DEVICES["nand_flash"])
+
+
+def test_sharding_rules_cover_layouts():
+    for layout in EMBED_LAYOUTS:
+        specs = embed_store_specs(layout)
+        assert set(specs) == {"payload", "scale", "bias"}
+        for s in specs.values():
+            assert s[0] == "shard"
+    with pytest.raises(ValueError):
+        embed_store_specs("diag")
+    cache = embed_cache_specs()
+    assert {"tag_table", "tag_row", "data", "stamp",
+            "clock", "hits", "misses"} <= set(cache)
+    batch = embed_batch_specs()
+    assert batch["miss"][0] == "shard"
+
+
+@pytest.mark.parametrize("layout", EMBED_LAYOUTS)
+def test_one_way_mesh_matches_single_device(layout):
+    """A 1-shard mesh must reproduce the single-device engine exactly —
+    pooled output, per-query sm_ios, and the numpy oracle."""
+    rows = [40, 64, 24]
+    cfg = EngineConfig(hbm_cache_bytes=64 << 10, use_kernels=False)
+    # identical tables on both sides: re-seed per construction
+    single = DeviceServingEngine(_tables(np.random.default_rng(1), rows),
+                                 DEVICES["nand_flash"], cfg)
+    sharded = ShardedServingEngine(_tables(np.random.default_rng(1), rows),
+                                   DEVICES["nand_flash"], cfg,
+                                   mesh=make_embed_mesh(1), layout=layout)
+    rng = np.random.default_rng(2)
+    for _ in range(2):
+        idx = np.stack([rng.integers(0, r, (6, 4)) for r in rows],
+                       axis=1).astype(np.int32)
+        p1, s1 = single.serve_batch(idx, bg_iops=5e4)
+        p2, s2 = sharded.serve_batch(idx, bg_iops=5e4)
+        np.testing.assert_allclose(p2, p1, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(p2, sharded.reference_pool(idx),
+                                   rtol=1e-5, atol=1e-5)
+        assert [q.sm_ios for q in s2] == [q.sm_ios for q in s1]
+        assert [q.latency_us for q in s2] == [q.latency_us for q in s1]
+    assert sharded.stats.sm_ios == single.stats.sm_ios
+    assert sharded.hit_rate == pytest.approx(single.hit_rate)
+
+
+def test_degenerate_batches_sharded():
+    rng = np.random.default_rng(3)
+    eng = ShardedServingEngine(_tables(rng, [16, 16]), DEVICES["nand_flash"],
+                               EngineConfig(use_kernels=False),
+                               mesh=make_embed_mesh(1))
+    assert eng.hit_rate == 0.0                       # before any batch
+    pooled, stats = eng.serve_batch(np.zeros((0, 2, 4), np.int32))
+    assert pooled.shape == (0, 2, 8) and stats == []
+    pooled, stats = eng.serve_batch(np.zeros((3, 2, 1), np.int32))  # P=1
+    assert pooled.shape == (3, 2, 8) and len(stats) == 3
+    with pytest.raises(ValueError):
+        eng.serve_batch(np.zeros((1, 3, 2), np.int32))   # table mismatch
+    with pytest.raises(ValueError):
+        eng.serve_batch(np.full((1, 2, 2), 99, np.int32))  # out of range
+
+
+def test_cluster_device_plane_with_mesh_host():
+    """``ClusterSim.run_device_plane`` serves routed subsets through per-host
+    engines; a host with ``mesh_shape`` becomes a (here 1-way) mesh slice."""
+    import dataclasses
+
+    from repro.core.power import HW_SS
+    from repro.runtime.cluster import ClusterConfig, ClusterSim, HostSpec
+    from repro.workloads.archetypes import ARCHETYPES, build_trace
+
+    spec = ARCHETYPES["zipf_steady"]
+    spec = dataclasses.replace(
+        spec, num_queries=48,
+        tenants=tuple(dataclasses.replace(
+            t, table_bytes=3e5, num_user_tables=2, num_item_tables=1)
+            for t in spec.tenants))
+    trace = build_trace(spec)
+    rng = np.random.default_rng(4)
+    tables = {m.table_id: rng.standard_normal(
+        (m.num_rows, 16)).astype(np.float32) for m in trace.all_metas()}
+    plain = HostSpec(name="plain", host=HW_SS, fm_cache_bytes=2 << 20)
+    mesh = dataclasses.replace(plain, name="mesh", mesh_shape=(1,))
+    assert plain.mesh_devices == 1 and mesh.mesh_devices == 1
+    sim = ClusterSim(ClusterConfig(hosts=(plain, mesh),
+                                   routing="round_robin"))
+    rep = sim.run_device_plane(trace, tables, chunk=16)
+    assert rep.queries == 48
+    by = {h.name: h for h in rep.hosts}
+    assert by["mesh"].mesh_devices == 1
+    assert by["plain"].sm_ios > 0 and by["mesh"].sm_ios > 0
+    assert 0.0 < by["mesh"].engine_hit_rate < 1.0
+    assert rep.p99_us >= rep.p50_us > 0.0
+
+
+# -- 8-way forced-device parity (subprocess) ---------------------------------
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import json
+import time
+import numpy as np
+from repro.core.io_sim import DEVICES
+from repro.launch.mesh import make_embed_mesh
+from repro.runtime.engine import DeviceServingEngine, EngineConfig
+from repro.runtime.sharded_engine import ShardedServingEngine
+from repro.workloads.archetypes import ARCHETYPES, build_trace
+
+out = {"kernel": [], "sweep": []}
+
+# 1) kernel-path parity: the Pallas probe/gather kernels under an 8-way
+# shard_map, minimal shapes (interpret mode compiles are expensive)
+rows = [40, 64]
+def mk_tables():
+    rng = np.random.default_rng(0)
+    return {t: rng.standard_normal((r, 8)).astype(np.float32)
+            for t, r in enumerate(rows)}
+cfg = EngineConfig(hbm_cache_bytes=64 << 10, use_kernels=True)
+rng = np.random.default_rng(1)
+idx = np.stack([rng.integers(0, r, (4, 4)) for r in rows],
+               axis=1).astype(np.int32)
+for layout in ("row", "table"):
+    single = DeviceServingEngine(mk_tables(), DEVICES["nand_flash"], cfg)
+    sh = ShardedServingEngine(mk_tables(), DEVICES["nand_flash"], cfg,
+                              mesh=make_embed_mesh(8), layout=layout)
+    p1, s1 = single.serve_batch(idx)
+    p2, s2 = sh.serve_batch(idx)
+    np.testing.assert_allclose(p2, p1, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(p2, sh.reference_pool(idx),
+                               rtol=1e-5, atol=1e-5)
+    assert [q.sm_ios for q in s2] == [q.sm_ios for q in s1]
+    # warm pass: served rows now live in the shards' HBM caches
+    _, w = sh.serve_batch(idx)
+    assert sum(q.sm_ios for q in w) == 0
+    out["kernel"].append(layout)
+
+# 2) archetype-trace sweep, jnp path: serve_columnar parity across traces
+def small(spec):
+    return dataclasses.replace(
+        spec, num_queries=48,
+        tenants=tuple(dataclasses.replace(
+            t, table_bytes=3e5, num_user_tables=3, num_item_tables=1)
+            for t in spec.tenants))
+cfg = EngineConfig(hbm_cache_bytes=2 << 20, use_kernels=False)
+for name in ("zipf_steady", "bursty", "multi_tenant"):
+    t0 = time.perf_counter()
+    trace = build_trace(small(ARCHETYPES[name]))
+    rng = np.random.default_rng(2)
+    tabs = {m.table_id: rng.standard_normal(
+        (m.num_rows, 16)).astype(np.float32) for m in trace.all_metas()}
+    single = DeviceServingEngine(tabs, DEVICES["optane_ssd"], cfg)
+    shards = {lay: ShardedServingEngine(
+        tabs, DEVICES["optane_ssd"], cfg, mesh=make_embed_mesh(8),
+        layout=lay) for lay in ("row", "table")}
+    for ch in trace.chunks(24):
+        p, tm, ios = single.serve_columnar(ch.columnar, bg_iops=5e4)
+        for lay, sh in shards.items():
+            ps, tms, ioss = sh.serve_columnar(ch.columnar, bg_iops=5e4)
+            np.testing.assert_allclose(ps, p, rtol=1e-5, atol=1e-5)
+            assert (ioss == ios).all(), (name, lay)
+            np.testing.assert_allclose(tms, tm)
+    for lay, sh in shards.items():
+        assert sh.stats.sm_ios == single.stats.sm_ios
+    out["sweep"].append([name, round(time.perf_counter() - t0, 1)])
+
+print(json.dumps(out))
+"""
+
+
+def test_sharded_parity_on_forced_8way_mesh():
+    """Both layouts on a real 8-device mesh: Pallas kernel path on a small
+    block, then a 3-archetype serve_columnar sweep (jnp path) — pooled
+    within 1e-5 of the single-device engine and the oracle, sm_ios exact."""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    result = json.loads(out.stdout.strip().splitlines()[-1])
+    assert result["kernel"] == ["row", "table"]
+    assert [s[0] for s in result["sweep"]] == [
+        "zipf_steady", "bursty", "multi_tenant"]

@@ -16,16 +16,41 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# git_sha values that cannot anchor a perf baseline: legacy entries written
+# outside a git checkout recorded "unknown", and nothing ties them to a
+# commit the guard could bisect against.
+BAD_SHAS = (None, "", "unknown")
+
+
+def select_perf_entry(entries):
+    """The most recent trajectory entry to guard against.
+
+    Walks entries newest-first and returns the first that (a) carries a
+    usable ``git_sha`` (not in :data:`BAD_SHAS`), (b) is the *newest*
+    measurement for that SHA (re-runs append — stale duplicates of an
+    already-seen SHA are skipped), and (c) has a
+    ``results.perf_trace.us_per_query`` number. Returns None if no entry
+    qualifies."""
+    seen = set()
+    for entry in reversed(entries):
+        sha = entry.get("git_sha")
+        if sha in BAD_SHAS or sha in seen:
+            continue
+        seen.add(sha)
+        result = (entry.get("results") or {}).get("perf_trace") or {}
+        if result.get("us_per_query") is not None:
+            return entry
+    return None
+
 
 def committed_us_per_query(path: str) -> float:
     with open(path) as f:
         data = json.load(f)
-    for entry in reversed(data.get("entries", [])):
-        result = (entry.get("results") or {}).get("perf_trace") or {}
-        val = result.get("us_per_query")
-        if val is not None:
-            return float(val)
-    raise SystemExit(f"no perf_trace.us_per_query entry in {path}")
+    entry = select_perf_entry(data.get("entries", []))
+    if entry is None:
+        raise SystemExit(
+            f"no usable perf_trace.us_per_query entry in {path}")
+    return float(entry["results"]["perf_trace"]["us_per_query"])
 
 
 def main() -> None:
