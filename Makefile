@@ -20,6 +20,7 @@ bench-smoke:
 	$(PY) -c "from benchmarks import scenarios; scenarios.run(num_queries=64)"
 	$(PY) -c "from benchmarks import device_tail; device_tail.run(num_queries=400)"
 	$(PY) -c "from benchmarks import fleet_ops; fleet_ops.run(num_queries=1000)"
+	$(PY) -c "from benchmarks import integrity_tail; integrity_tail.run(num_queries=400)"
 	$(PY) -c "from benchmarks import sharded_serve; sharded_serve.run(num_queries=96, device_counts=(1, 8))"
 
 # machine-readable us/query for the serving hot paths -> BENCH_serve.json.
@@ -27,7 +28,7 @@ bench-smoke:
 # accumulates the perf trajectory across PRs.
 bench-json:
 	$(PY) benchmarks/run.py --json BENCH_serve.json \
-		--only serve_batched,perf_trace,scenarios,device_tail,sharded_serve
+		--only serve_batched,perf_trace,scenarios,device_tail,integrity_tail,sharded_serve
 
 # perf guard: fail if the warm columnar us/query regresses more than 2x
 # against the latest perf_trace entry committed in BENCH_serve.json

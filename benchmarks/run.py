@@ -104,10 +104,10 @@ def main() -> None:
 
     from benchmarks import (depruning, device_tail, fig1_skew, fig3_io,
                             fig45_locality, fig6_cache_org, fleet_ops,
-                            interop_warmup, kernels, perf_trace, scenarios,
-                            serve_batched, sharded_serve, table8_power,
-                            table9_scaleout, table11_multitenancy,
-                            table34_pooled)
+                            integrity_tail, interop_warmup, kernels,
+                            perf_trace, scenarios, serve_batched,
+                            sharded_serve, table8_power, table9_scaleout,
+                            table11_multitenancy, table34_pooled)
 
     suites = [
         ("serve_batched", serve_batched.run),
@@ -122,6 +122,7 @@ def main() -> None:
         ("table9_scaleout", table9_scaleout.run),
         ("table11_multitenancy", table11_multitenancy.run),
         ("fleet_ops", fleet_ops.run),
+        ("integrity_tail", integrity_tail.run),
         ("scenarios", scenarios.run),
         ("depruning", depruning.run),
         ("interop_warmup", interop_warmup.run),

@@ -131,6 +131,11 @@ class IOEngine:
         self.num_devices = num_devices
         self.queue = queue
         self.sim = sim          # devices.sim.DeviceSim when latency_mode="sampled"
+        # runtime.redundancy.RedundancyPlane when the host has a data-
+        # integrity plane: consulted for rebuild background load before the
+        # latency calc and for corruption/retry/hedging after it. None (the
+        # default) leaves every path below untouched, bit for bit.
+        self.integrity = None
         self.total_ios = 0
         self.total_bus_bytes = 0
         self.total_wanted_bytes = 0
@@ -145,15 +150,23 @@ class IOEngine:
         """
         if num_ios == 0:
             return 0.0, 0
+        integ = self.integrity
         if self.sim is not None:
-            lat = self.sim.submit(
-                self.sim.now_us if at_us is None else at_us, num_ios, bg_iops)
+            at = self.sim.now_us if at_us is None else at_us
+            lat = self.sim.submit(at, num_ios, bg_iops)
         else:
+            at = 0.0 if at_us is None else at_us
+            if integ is not None:
+                extra = integ.extra_bg_iops(at)
+                if extra:
+                    bg_iops = bg_iops + extra
             per_dev = math.ceil(num_ios / self.num_devices)
             outstanding = min(per_dev, self.queue.max_outstanding_per_table)
             waves = math.ceil(per_dev / max(1, outstanding))
             lat = waves * self.device.loaded_latency_us(
                 bg_iops / self.num_devices, outstanding)
+        if integ is not None:
+            lat = integ.apply_scalar(at, num_ios, lat)
         amp = self.device.read_amplification(row_bytes, self.queue.small_granularity)
         bus = int(num_ios * row_bytes * amp)
         self.total_ios += num_ios
@@ -177,11 +190,18 @@ class IOEngine:
         nz = n > 0
         if not nz.any():
             return lat, bus
+        integ = self.integrity
         if self.sim is not None:
             at = (np.full(n.shape, self.sim.now_us) if at_us is None
                   else np.asarray(at_us, np.float64))
             lat = self.sim.submit_batch(at, n, bg_iops)
         else:
+            at = (np.zeros(n.shape) if at_us is None
+                  else np.asarray(at_us, np.float64))
+            if integ is not None:
+                extra = integ.extra_bg_iops(float(at.max()))
+                if extra:
+                    bg_iops = bg_iops + extra
             per_dev = -(-n[nz] // self.num_devices)
             outstanding = np.minimum(per_dev,
                                      self.queue.max_outstanding_per_table)
@@ -194,6 +214,8 @@ class IOEngine:
             burst = outstanding > self.device.max_outstanding
             l[burst] *= (outstanding[burst] / self.device.max_outstanding) ** 2
             lat[nz] = waves * l
+        if integ is not None:
+            lat = integ.apply(at, n, lat)
         amp = self.device.read_amplification(row_bytes, self.queue.small_granularity)
         b = (n[nz] * row_bytes * amp).astype(np.int64)
         bus[nz] = b
@@ -217,11 +239,18 @@ class IOEngine:
         nz = n > 0
         if not nz.any():
             return lat, bus
+        integ = self.integrity
         if self.sim is not None:
             at = (np.full(n.shape, self.sim.now_us) if at_us is None
                   else np.asarray(at_us, np.float64))
             lat = self.sim.submit_batch(at, n, bg_iops)
         else:
+            at = (np.zeros(n.shape) if at_us is None
+                  else np.asarray(at_us, np.float64))
+            if integ is not None:
+                extra = integ.extra_bg_iops(float(at.max()))
+                if extra:
+                    bg_iops = bg_iops + extra
             per_dev = -(-n[nz] // self.num_devices)
             outstanding = np.minimum(per_dev,
                                      self.queue.max_outstanding_per_table)
@@ -233,6 +262,8 @@ class IOEngine:
             burst = outstanding > self.device.max_outstanding
             l[burst] *= (outstanding[burst] / self.device.max_outstanding) ** 2
             lat[nz] = waves * l
+        if integ is not None:
+            lat = integ.apply(at, n, lat)
         if self.queue.small_granularity:
             amp = 1.0
         else:

@@ -63,6 +63,13 @@ class SDMConfig:
     tuning: object = None                # devices.DeviceTuning (sampled mode)
     update: object = None                # devices.UpdateSpec (write plane)
     sim_seed: int = 0
+    # -- data-integrity plane (devices/integrity.py + runtime/redundancy.py) --
+    # Either field non-None attaches a RedundancyPlane to the IO engine:
+    # media-error injection + ECC retry ladders (IntegritySpec) and k-way
+    # replication / hedged reads / rebuild-after-loss (ReplicationSpec).
+    # None/None (the default) leaves the IO path untouched, bit for bit.
+    integrity: object = None             # devices.IntegritySpec
+    redundancy: object = None            # runtime.redundancy.ReplicationSpec
 
 
 @dataclasses.dataclass
@@ -74,6 +81,13 @@ class QueryStats:
     pooled_hits: int = 0
     pooled_lookups: int = 0
     sm_time_us: float = 0.0              # slowest SM IO batch (pre-overlap)
+    # data-integrity plane counters (zero unless a RedundancyPlane is
+    # attached; mirrored from IntegrityStats so they roll up through
+    # HostReport/ClusterReport)
+    corrupt_reads: int = 0
+    retry_steps: int = 0
+    hedged_reads: int = 0
+    repair_ios: int = 0
 
 
 class SDMEmbeddingStore:
@@ -102,6 +116,14 @@ class SDMEmbeddingStore:
         else:
             raise ValueError(f"unknown latency_mode {cfg.latency_mode!r}")
         self.io = IOEngine(device, cfg.num_devices, cfg.io_queue, sim=sim)
+        if cfg.integrity is not None or cfg.redundancy is not None:
+            # call-time import: runtime/__init__ imports this module back
+            from repro.runtime.redundancy import RedundancyPlane
+            total = int(sum(m.num_rows for m in metas
+                            if self.placement[m.table_id] != plc.FM_DIRECT))
+            self.io.integrity = RedundancyPlane(
+                cfg.integrity, cfg.redundancy, device, cfg.num_devices,
+                max(total, 1), seed=cfg.sim_seed, sim=sim)
         self.rng = np.random.default_rng(seed)
         self.stats = QueryStats()
         self.batch_fallbacks = 0   # columnar path dropped to the exact slow path
@@ -164,6 +186,15 @@ class SDMEmbeddingStore:
         if table_id in self.payloads:
             tbl = self.payloads[table_id]
             vec = tbl[indices % tbl.shape[0]].sum(axis=0)
+            integ = self.io.integrity
+            if integ is not None and not integ.integrity.checksums:
+                # detection disabled: corrupt rows were served as-is — the
+                # undetected count perturbs the pooled vector, proving the
+                # injection reaches real data (the checksum-oracle tests
+                # pin that with checksums on, this perturbation vanishes)
+                u = integ.take_undetected()
+                if u:
+                    vec = vec + np.float32(u)
             if self.pooled_cache is not None and place != plc.FM_DIRECT:
                 self.pooled_cache.insert(table_id, indices, vec)
         elif self.pooled_cache is not None and place != plc.FM_DIRECT:
@@ -180,14 +211,39 @@ class SDMEmbeddingStore:
         queues; analytic mode ignores it."""
         sm_lat = 0.0
         ios = 0
+        integ = self.io.integrity
+        if integ is not None:
+            ps = integ.stats
+            c0 = (ps.corrupt_reads, ps.retry_steps, ps.hedged_reads,
+                  ps.repair_ios)
         for tid, idx in requests.items():
             r = self.lookup_pool(tid, idx, bg_iops, at_us=at_us)
             sm_lat = max(sm_lat, r["latency_us"])
             ios += r["ios"]
         q = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat), sm_ios=ios,
                        sm_time_us=sm_lat)
+        if integ is not None:
+            ps = integ.stats
+            q.corrupt_reads = ps.corrupt_reads - c0[0]
+            q.retry_steps = ps.retry_steps - c0[1]
+            q.hedged_reads = ps.hedged_reads - c0[2]
+            q.repair_ios = ps.repair_ios - c0[3]
+            self._sync_integrity()
         self.stats.latency_us += q.latency_us
         return q
+
+    def _sync_integrity(self) -> None:
+        """Mirror the integrity plane's counters into the aggregate
+        ``QueryStats`` (plane stats are the source of truth; both reset
+        together at measurement boundaries)."""
+        integ = self.io.integrity
+        if integ is None:
+            return
+        s, ps = self.stats, integ.stats
+        s.corrupt_reads = ps.corrupt_reads
+        s.retry_steps = ps.retry_steps
+        s.hedged_reads = ps.hedged_reads
+        s.repair_ios = ps.repair_ios
 
     # -- batched (columnar) query path ----------------------------------------
 
@@ -571,6 +627,8 @@ class SDMEmbeddingStore:
         self.stats.latency_us = float(np.cumsum(np.concatenate(
             [[self.stats.latency_us],
              np.maximum(sm_lat, self.cfg.item_time_us)]))[-1])
+        if self.io.integrity is not None:
+            self._sync_integrity()
 
     def _serve_fused(self, chunk: ColumnarChunk, meta, bg_iops: float,
                      arrivals_us) -> Optional[Tuple[np.ndarray, np.ndarray]]:
@@ -857,6 +915,8 @@ class SDMEmbeddingStore:
                             sm_ios=int(ios_q[q]), sm_time_us=float(sm_lat[q]))
             self.stats.latency_us += qs.latency_us
             out.append(qs)
+        if self.io.integrity is not None:
+            self._sync_integrity()
         return out
 
     def _pooled_headroom_dict(self, per_table) -> bool:

@@ -9,6 +9,9 @@ read-priority scheduling). Select it per store with
 ``SDMConfig(latency_mode="sampled")`` or per simulated host with
 ``HostSpec(latency_mode="sampled")``.
 """
+from repro.devices.integrity import (IntegritySpec, IntegrityStats,  # noqa: F401
+                                     MediaErrorModel, row_checksums,
+                                     verify_rows)
 from repro.devices.sim import DeviceSim  # noqa: F401
 from repro.devices.tuning import DEFAULT_TUNING, DeviceTuning  # noqa: F401
 from repro.devices.writes import UpdateSpec, UpdateStream  # noqa: F401

@@ -74,6 +74,12 @@ class DeviceSim:
         self.slot_free_us = np.zeros(num_devices * device.channels, np.float64)
         self._rr = 0      # data-residency rotation: which channel serves next
         self.now_us = 0.0
+        # additional background write-shaped streams (rebuild/scrub planes):
+        # any object with the UpdateStream pop_until contract. Admitted into
+        # the same channel-slot ledger as model-refresh writes, so rebuild
+        # traffic competes with foreground reads identically.
+        self.extra_streams: List = []
+        self.repair_busy_us = 0.0
         # aggregate depth ledger: (completion_us, device-visible IOs)
         self._depth_events: List[tuple] = []
         self._depth = 0
@@ -110,23 +116,34 @@ class DeviceSim:
 
     def _admit_writes(self, t_us: float) -> None:
         """Fold every write wave due by ``t_us`` into the slot queues."""
-        if self.update is None:
+        if self.update is None and not self.extra_streams:
             return
         free = self.slot_free_us
         read_priority = self.tuning.read_priority
-        for at, service in self.update.pop_until(t_us):
-            self.write_busy_us += service
-            if read_priority:
-                # §4.1 read-priority: programs are suspendable — update
-                # writes reclaim read-idle channel time and never block a
-                # read (their throughput cost is theirs alone)
-                continue
-            # firmware default: the program occupies the die the data lands
-            # on — the same residency rotation reads follow, so subsequent
-            # reads on that channel queue behind the program (+GC)
-            slot = self._rr % len(free)
-            self._rr += 1
-            free[slot] = max(at, free[slot]) + service
+        if self.update is not None:
+            for at, service in self.update.pop_until(t_us):
+                self.write_busy_us += service
+                if read_priority:
+                    # §4.1 read-priority: programs are suspendable — update
+                    # writes reclaim read-idle channel time and never block a
+                    # read (their throughput cost is theirs alone)
+                    continue
+                # firmware default: the program occupies the die the data
+                # lands on — the same residency rotation reads follow, so
+                # subsequent reads on that channel queue behind the program
+                # (+GC)
+                slot = self._rr % len(free)
+                self._rr += 1
+                free[slot] = max(at, free[slot]) + service
+        # rebuild/scrub streams share the ledger; their programs are never
+        # read-priority-suspendable (they ARE the recovery path) but they
+        # follow the same residency rotation.
+        for stream in self.extra_streams:
+            for at, service in stream.pop_until(t_us):
+                self.repair_busy_us += service
+                slot = self._rr % len(free)
+                self._rr += 1
+                free[slot] = max(at, free[slot]) + service
 
     def _smooth(self, t_us: float, num_ios: int) -> float:
         """Token-bucket admission pacing; returns the admission time."""
@@ -242,6 +259,8 @@ class DeviceSim:
         self._tok_t = 0.0
         if self.update is not None and np.isfinite(self.update.mean_gap_us):
             self.update.next_us = self.update._gap()
+        for stream in self.extra_streams:
+            stream.reset_clock()
 
     # -- reporting -----------------------------------------------------------
 

@@ -78,6 +78,14 @@ class HostSpec:
     # picks the store partitioning ("row" | "table", launch/sharding.py).
     mesh_shape: Optional[Tuple[int, ...]] = None
     shard_layout: str = "row"
+    # Data-integrity plane (devices/integrity.py + runtime/redundancy.py):
+    # ``integrity`` a devices.IntegritySpec (media-error model + retry
+    # ladder), ``redundancy`` a runtime.redundancy.ReplicationSpec (k-way
+    # replication, hedged reads, rebuild-after-loss). Either non-None
+    # attaches a RedundancyPlane to the host's IO engine; None/None is the
+    # exact vanilla IO path, bit for bit.
+    integrity: object = None
+    redundancy: object = None
 
     @property
     def mesh_devices(self) -> int:
@@ -125,6 +133,14 @@ class HostReport:
     shed_queries: int = 0                  # queries with pooled lookups shed
     io_error_retries: int = 0              # transient-error retries paid
     degraded_chunks: int = 0               # chunks served in degraded mode
+    # Data-integrity plane counters (runtime/redundancy.py); all zero when
+    # the host has no IntegritySpec/ReplicationSpec attached.
+    corrupt_reads: int = 0                 # rows failing checksum on read
+    retry_steps: int = 0                   # ECC read-retry ladder steps paid
+    hedged_reads: int = 0                  # duplicate reads fired at replicas
+    repair_ios: int = 0                    # retries + replica + refetch + hedges
+    rows_lost: int = 0                     # rows losing a copy to device_loss
+    rows_rebuilt: int = 0                  # rows re-replicated by the rebuild
     # Device-plane (jax engine) fields; zero unless the host served through
     # an attached DeviceServingEngine / ShardedServingEngine.
     mesh_devices: int = 0                  # jax devices the engine spanned
@@ -193,6 +209,32 @@ class ClusterReport:
     def degraded_chunks(self) -> int:
         return sum(h.degraded_chunks for h in self.hosts)
 
+    # -- data-integrity counter rollups (zero when no plane is attached) --
+
+    @property
+    def corrupt_reads(self) -> int:
+        return sum(h.corrupt_reads for h in self.hosts)
+
+    @property
+    def retry_steps(self) -> int:
+        return sum(h.retry_steps for h in self.hosts)
+
+    @property
+    def hedged_reads(self) -> int:
+        return sum(h.hedged_reads for h in self.hosts)
+
+    @property
+    def repair_ios(self) -> int:
+        return sum(h.repair_ios for h in self.hosts)
+
+    @property
+    def rows_lost(self) -> int:
+        return sum(h.rows_lost for h in self.hosts)
+
+    @property
+    def rows_rebuilt(self) -> int:
+        return sum(h.rows_rebuilt for h in self.hosts)
+
     def fleet_power(self, demand_qps: float,
                     tail: bool = False) -> FleetEstimate:
         """Eq. 7 from measured traffic: scale the simulated cluster until
@@ -229,7 +271,9 @@ class HostSim:
                       item_time_us=item_us,
                       latency_mode="analytic" if dram_only
                       else spec.latency_mode,
-                      tuning=spec.tuning, update=spec.update, sim_seed=seed),
+                      tuning=spec.tuning, update=spec.update, sim_seed=seed,
+                      integrity=None if dram_only else spec.integrity,
+                      redundancy=None if dram_only else spec.redundancy),
             seed=seed)
         self.sched = ServeScheduler(self.store, ServeConfig(
             item_compute_us=item_us, latency_target_us=latency_target_us))
@@ -343,6 +387,11 @@ class HostSim:
             # trace's first arrival again, so the queues must not carry the
             # warmup pass's clock (cache state above is kept, as always)
             self.store.io.sim.reset_clock()
+        if self.store.io.integrity is not None:
+            # integrity counters reset with the other stats; plane *state*
+            # (wear, disturb, rebuild progress, RNG position) persists —
+            # same contract as reset_clock above not rewinding RNGs
+            self.store.io.integrity.reset_stats()
         self.sched = ServeScheduler(self.store, self.sched.cfg)
 
     def report(self, duration_us: float) -> HostReport:
@@ -374,7 +423,7 @@ class HostSim:
                 else min(lat_based, cap)
             feasible_p99 = min(cap, compute) if p99_based <= 0 \
                 else min(p99_based, cap)
-        return HostReport(
+        rep = HostReport(
             name=spec.name, queries=queries,
             p50_us=self.sched.percentile(50), p95_us=self.sched.percentile(95),
             p99_us=self.sched.percentile(99), deferred=self.sched.deferred,
@@ -382,13 +431,28 @@ class HostSim:
             feasible_qps=feasible, power=spec.host.power,
             batch_fallbacks=self.store.batch_fallbacks,
             feasible_qps_p99=feasible_p99)
+        integ = self.store.io.integrity
+        if integ is not None:
+            # fold end-of-trace rebuild progress in before reading counters
+            # (a rebuild wave due before the trace end may not have been
+            # popped if no foreground read followed it)
+            integ.advance(duration_us)
+            ps = integ.stats
+            rep.corrupt_reads = ps.corrupt_reads
+            rep.retry_steps = ps.retry_steps
+            rep.hedged_reads = ps.hedged_reads
+            rep.repair_ios = ps.repair_ios
+            rep.rows_lost = ps.rows_lost
+            rep.rows_rebuilt = ps.rows_rebuilt
+        return rep
 
 
 def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
                  chunk: int, latency_target_us: float, seed: int,
                  n_passes: int, warmup: bool, ext_bg: float, columnar: bool,
                  duration_us: float,
-                 ctl: Optional[HostControl] = None
+                 ctl: Optional[HostControl] = None,
+                 replay_at: Optional[np.ndarray] = None
                  ) -> Tuple[HostReport, np.ndarray]:
     """All self-consistency passes for one host.
 
@@ -416,7 +480,8 @@ def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
         def _replay():
             if chost is not None:
                 chost.begin_replay()
-                chost.serve(subset, chunk, bg, columnar)
+                chost.serve(subset, chunk, bg, columnar,
+                            replay_at=replay_at)
             else:
                 sim.run_trace(subset, chunk, bg, columnar)
 
@@ -426,13 +491,16 @@ def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
             # snapshots don't carry DeviceSim queue/RNG state, so sampled
             # hosts replay the warmup; control programs make the ledger —
             # and through degrade triggers, the caches — bg-dependent, so
-            # controlled hosts always replay too)
+            # controlled hosts always replay too; integrity planes carry
+            # RNG/wear/rebuild state snapshots don't capture, so those
+            # hosts replay as well)
             if warm_snap is not None:
                 sim.restore(warm_snap)
             else:
                 _replay()
                 if columnar and n_passes > 1 and ctl is None and \
-                        spec.latency_mode != "sampled":
+                        spec.latency_mode != "sampled" and \
+                        spec.integrity is None and spec.redundancy is None:
                     warm_snap = sim.snapshot()
             sim.reset_measurement()
         _replay()
@@ -548,6 +616,7 @@ class ClusterSim:
         names = [s.name for s in self.specs]
         fo: Dict[str, int] = {}
         rp: Dict[str, int] = {}
+        replay_at = None
         active_ctl = (failures is not None and failures.events) \
             or degrade is not None
         if failures is not None and failures.events:
@@ -555,6 +624,7 @@ class ClusterSim:
                                       failures)
             assign, fo, rp = plan.assign, plan.failed_over_in, \
                 plan.replayed_in
+            replay_at = plan.replay_at_us
         controls = build_controls(names, failures, degrade, self.cfg.seed) \
             if active_ctl else [None] * len(names)
         metas = trace.all_metas()
@@ -564,7 +634,8 @@ class ClusterSim:
         jobs = [(h, (self.specs[h], subsets[h], metas, self.cfg.chunk,
                      self.cfg.latency_target_us, self.cfg.seed, n_passes,
                      warmup, ext.get(self.specs[h].name, 0.0), columnar,
-                     trace.duration_us, controls[h]))
+                     trace.duration_us, controls[h],
+                     None if replay_at is None else replay_at[assign == h]))
                 for h in range(len(self.specs)) if len(subsets[h])]
         if parallel and len(jobs) > 1:
             results = _map_hosts(jobs, parallel, max_workers)
@@ -637,7 +708,9 @@ class ClusterSim:
                     if columnar and n_passes > 1:
                         for h in need:
                             if self.specs[h].latency_mode != "sampled" \
-                                    and controls[h] is None:
+                                    and controls[h] is None \
+                                    and self.specs[h].integrity is None \
+                                    and self.specs[h].redundancy is None:
                                 warm_snaps[h] = sims[h].snapshot()
                 for sim in sims:
                     sim.reset_measurement()
@@ -690,10 +763,12 @@ class ClusterSim:
         active = list(hosts)
         names = [s.name for s in self.specs]
 
-        def _serve(h: int, part: Trace) -> None:
+        def _serve(h: int, part: Trace,
+                   floors: Optional[np.ndarray] = None) -> None:
             host_bg = bg.get(self.specs[h].name, 0.0)
             if chosts is not None and chosts[h] is not None:
-                chosts[h].serve(part, chunk, host_bg, columnar)
+                chosts[h].serve(part, chunk, host_bg, columnar,
+                                replay_at=floors)
             else:
                 sims[h].run_trace(part, chunk, host_bg, columnar)
             # streamed chunks are served once — drop the replay caches
@@ -705,13 +780,18 @@ class ClusterSim:
                 if chosts[h] is not None:
                     chosts[h].begin_replay()
         pend: Dict[int, List[Trace]] = {h: [] for h in active}
+        # replayed-query arrival floors, buffered in lockstep with pend so
+        # streamed chunk cuts slice them exactly like the trace pieces
+        pendf: Dict[int, List[np.ndarray]] = {h: [] for h in active}
         npend: Dict[int, int] = {h: 0 for h in active}
         for piece in stream.pieces():
             assign = self.route(piece.trace, piece.start)
+            ra = None
             if failures is not None:
                 plan = rewrite_assignment(assign, piece.trace.arrival_us,
                                           names, failures)
                 assign = plan.assign
+                ra = plan.replay_at_us
                 if fo is not None:
                     for k, v in plan.failed_over_in.items():
                         fo[k] = fo.get(k, 0) + v
@@ -719,26 +799,34 @@ class ClusterSim:
                     for k, v in plan.replayed_in.items():
                         rp[k] = rp.get(k, 0) + v
             for h in active:
-                sub = piece.trace.subset(assign == h)
+                mask = assign == h
+                sub = piece.trace.subset(mask)
                 if not len(sub):
                     continue
                 pend[h].append(sub)
+                if failures is not None:
+                    pendf[h].append(ra[mask])
                 npend[h] += len(sub)
                 if npend[h] < chunk:
                     continue
                 merged = concat_traces(pend[h])
+                mergedf = np.concatenate(pendf[h]) if pendf[h] else None
                 cut = (npend[h] // chunk) * chunk
                 ready = merged if cut == npend[h] \
                     else slice_trace(merged, 0, cut)
-                _serve(h, ready)
+                readyf = None if mergedf is None else mergedf[:cut]
+                _serve(h, ready, readyf)
                 pend[h] = [] if cut == npend[h] \
                     else [slice_trace(merged, cut, npend[h])]
+                pendf[h] = [] if mergedf is None or cut == len(mergedf) \
+                    else [mergedf[cut:]]
                 npend[h] -= cut
             if len(piece.trace):
                 last = float(piece.trace.arrival_us[-1])
         for h in active:                       # flush the final short chunk
             if npend[h]:
-                _serve(h, concat_traces(pend[h]))
+                _serve(h, concat_traces(pend[h]),
+                       np.concatenate(pendf[h]) if pendf[h] else None)
         return last
 
     def run_device_plane(self, trace: Trace,

@@ -61,11 +61,17 @@ class FailoverPlan:
     name): arrivals inside the downtime window vs. in-flight ledger
     replays from just before it. ``stranded`` counts queries that found no
     healthy replica and stay queued on the crashed host (served after
-    recovery — still never lost)."""
+    recovery — still never lost). ``replay_at_us`` is the per-query
+    *effective service time* floor: a replayed in-flight query physically
+    re-executes on the replica at the crash instant, not at its original
+    arrival — time-window triggers (IO-error bursts) must judge it by
+    ``max(arrival, replay_at)``. Zero for queries that were never
+    replayed."""
     assign: np.ndarray
     failed_over_in: Dict[str, int]
     replayed_in: Dict[str, int]
     stranded: int = 0
+    replay_at_us: Optional[np.ndarray] = None
 
 
 def rewrite_assignment(assign: np.ndarray, arrival_us: np.ndarray,
@@ -85,13 +91,14 @@ def rewrite_assignment(assign: np.ndarray, arrival_us: np.ndarray,
     fo: Dict[str, int] = {}
     rp: Dict[str, int] = {}
     n_hosts = len(host_names)
+    replay_at = np.zeros(len(assign), np.float64)
     if failures is None or n_hosts <= 1:
-        return FailoverPlan(assign, fo, rp)
+        return FailoverPlan(assign, fo, rp, 0, replay_at)
     idx = {name: i for i, name in enumerate(host_names)}
     crashes = [e for e in failures.sorted_events()
                if e.kind == "crash" and e.host in idx]
     if not crashes:
-        return FailoverPlan(assign, fo, rp)
+        return FailoverPlan(assign, fo, rp, 0, replay_at)
     arr = np.asarray(arrival_us, np.float64)
     down: Dict[int, List[Tuple[float, float]]] = {}
     for e in crashes:
@@ -114,12 +121,19 @@ def rewrite_assignment(assign: np.ndarray, arrival_us: np.ndarray,
             if ok.size:
                 assign[ok] = c
                 name = host_names[c]
-                n_down = int((arr[ok] >= e.start_us).sum())
+                replayed = ok[arr[ok] < e.start_us]
+                n_down = ok.size - replayed.size
                 fo[name] = fo.get(name, 0) + n_down
-                rp[name] = rp.get(name, 0) + (ok.size - n_down)
+                rp[name] = rp.get(name, 0) + replayed.size
+                # in-flight replays physically re-execute at the crash
+                # instant: that is when later time-window triggers (error
+                # bursts) must see them
+                if replayed.size:
+                    replay_at[replayed] = np.maximum(replay_at[replayed],
+                                                     e.start_us)
             qs = qs[bad]
         stranded += int(qs.size)
-    return FailoverPlan(assign, fo, rp, stranded)
+    return FailoverPlan(assign, fo, rp, stranded, replay_at)
 
 
 # -- degraded-mode serving ----------------------------------------------------
@@ -224,6 +238,7 @@ class ControlledHost:
         self.degraded_chunks = 0
         self._degraded = False
         self._crash_done: set = set()
+        self._loss_done: set = set()
         self._err_rng: Dict[int, np.random.Generator] = {}
         for k, e in enumerate(self.ctl.events):
             if e.kind == "io_errors":
@@ -232,18 +247,36 @@ class ControlledHost:
                         [self.ctl.seed, 0xE7707, self.ctl.host_index, k]))
         if self._base_tuning is not None:
             self.sim.store.io.sim.tuning = self._base_tuning
+        integ = self.sim.store.io.integrity
+        if integ is not None:
+            # the data-integrity plane replays from scratch too: fresh RNG,
+            # wear state, rebuild stream — every replay of the same trace
+            # is bit-identical
+            integ.begin_replay()
 
     def serve(self, trace, chunk: int, bg_iops: float,
-              columnar: bool = True) -> None:
+              columnar: bool = True, replay_at=None) -> None:
         """Drop-in for ``HostSim.run_trace`` with the control program
         applied. A chunk outside every window goes through the exact calls
-        ``serve_trace`` / the dict plane would make."""
+        ``serve_trace`` / the dict plane would make. ``replay_at`` (aligned
+        with the trace) carries the failover plan's per-query effective
+        service-time floors — replayed in-flight queries re-execute at the
+        crash instant, and IO-error bursts must judge them there."""
+        if replay_at is None:
+            for ch in trace.chunks(chunk):
+                self._serve_chunk(ch, bg_iops, columnar)
+            return
+        ra = np.asarray(replay_at, np.float64)
+        off = 0
         for ch in trace.chunks(chunk):
-            self._serve_chunk(ch, bg_iops, columnar)
+            n = len(ch.arrival_us)
+            self._serve_chunk(ch, bg_iops, columnar, ra[off:off + n])
+            off += n
 
     # -- one chunk -----------------------------------------------------------
 
-    def _serve_chunk(self, ch, bg: float, columnar: bool) -> None:
+    def _serve_chunk(self, ch, bg: float, columnar: bool,
+                     floors: Optional[np.ndarray] = None) -> None:
         sched = self.sim.sched
         arr = np.asarray(ch.arrival_us, np.float64)
         t0, t1 = float(arr[0]), float(arr[-1])
@@ -252,6 +285,10 @@ class ControlledHost:
                     and t0 >= e.start_us:
                 self._crash_done.add(k)
                 self._crash_restart(e.cold_restart)
+            elif e.kind == "device_loss" and k not in self._loss_done \
+                    and t0 >= e.start_us:
+                self._loss_done.add(k)
+                self._device_loss(e.start_us)
         bg_eff = bg
         swap = None
         for e in self.ctl.events:
@@ -262,15 +299,18 @@ class ControlledHost:
                     swap = e.slow_tuning
         if self._degrade_chunk(sched, arr, t0):
             return
+        # replay floors can push a query's effective service time past the
+        # chunk's raw arrival span — the burst-overlap test must see that
+        t1_eff = t1 if floors is None else max(t1, float(floors.max()))
         errs = [(k, e) for k, e in enumerate(self.ctl.events)
                 if e.kind == "io_errors"
-                and e.start_us <= t1 and e.end_us > t0]
+                and e.start_us <= t1_eff and e.end_us > t0]
         if swap is not None:
             self.sim.store.io.sim.tuning = swap
         try:
             if errs:
                 self._serve_with_errors(sched, ch, arr, bg_eff, columnar,
-                                        errs)
+                                        errs, floors)
             elif columnar:
                 sched.serve_columnar(ch.columnar, bg_eff, arrivals_us=arr,
                                      collect=False)
@@ -308,7 +348,8 @@ class ControlledHost:
         return True
 
     def _serve_with_errors(self, sched, ch, arr: np.ndarray, bg: float,
-                           columnar: bool, errs) -> None:
+                           columnar: bool, errs,
+                           floors: Optional[np.ndarray] = None) -> None:
         """Serve a chunk overlapped by IO-error bursts: the data plane runs
         unchanged (collect=True to learn each query's admission), then each
         in-window query retries with ``error_rate`` probability, paying
@@ -316,7 +357,13 @@ class ControlledHost:
         from the event's seeded RNG in arrival order, so the burst is
         reproducible wherever the chunk is served. Deferred queries carry
         no latency sample, so only admitted hits are adjusted (their
-        retry happens after re-admission, outside this model)."""
+        retry happens after re-admission, outside this model).
+
+        ``floors`` are the failover plan's replay floors: a query replayed
+        into a failover window re-executes at the crash instant, so the
+        burst-window test judges it at ``max(arrival, floor)`` — raw
+        arrivals alone would silently skip the penalty for replayed-in
+        queries whose original arrival predates the burst."""
         p0 = len(sched.p_lat)
         if columnar:
             results = sched.serve_columnar(ch.columnar, bg, arrivals_us=arr,
@@ -326,9 +373,10 @@ class ControlledHost:
                                              arrivals_us=arr)
         admitted = np.array([r.admitted for r in results], bool)
         rank = np.cumsum(admitted) - admitted   # admitted-rank per query
+        eff = arr if floors is None else np.maximum(arr, floors)
         for k, e in errs:
             rng = self._err_rng[k]
-            inw = np.nonzero((arr >= e.start_us) & (arr < e.end_us))[0]
+            inw = np.nonzero((eff >= e.start_us) & (eff < e.end_us))[0]
             if not inw.size:
                 continue
             hits = inw[rng.random(inw.size) < e.error_rate]
@@ -360,6 +408,24 @@ class ControlledHost:
         if s.pooled_cache is not None:
             s.pooled_cache.store.clear()
             s.pooled_cache.used = 0
+
+    def _device_loss(self, at_us: float) -> None:
+        """One of the host's SM devices died: its share of rows loses a
+        copy. The integrity plane (when attached) starts serving those rows
+        from replicas and arms the background rebuild stream; with no plane
+        attached the event is recorded but costless (data is assumed
+        re-fetchable from the SM catalog). Either way the fused replay
+        tiers are invalidated — captured plans assume stable row placement,
+        and an ``evictions`` bump + ``drop_plan_caches`` forces the live
+        pipeline to re-derive (the caches only accelerate identical
+        re-serves, so this is correct by construction, exactly as in
+        :meth:`_crash_restart`)."""
+        s = self.sim.store
+        integ = s.io.integrity
+        if integ is not None:
+            integ.device_loss(at_us)
+        s.row_cache.evictions += 1
+        s.drop_plan_caches()
 
     def finalize_report(self, report):
         """Stamp this replay's control-plane counters onto the report."""

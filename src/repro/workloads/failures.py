@@ -23,6 +23,12 @@ against the healthy run. Three event kinds:
   Draws come from a seeded per-event stream consumed in arrival order, so
   serial/thread/process cluster runs and streamed/materialized traces see
   identical retries.
+* ``device_loss`` — one of the host's SM devices dies at ``start_us``
+  (``end_us`` bounds the event for scheduling; the data is gone until
+  rebuilt). With a data-integrity plane attached
+  (``HostSpec.integrity``/``redundancy``) the affected rows are served
+  from their replicas while a background rebuild stream re-replicates
+  them; without one the event only invalidates the host's replay caches.
 
 :func:`seeded_failures` draws a whole fleet's crash/repair history from
 exponential MTBF/MTTR clocks — the generated schedule is a pure function of
@@ -38,7 +44,7 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
-VALID_KINDS = ("crash", "slow", "io_errors")
+VALID_KINDS = ("crash", "slow", "io_errors", "device_loss")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,7 +107,33 @@ def seeded_failures(host_names: Sequence[str], duration_us: float, *,
     time-to-failure (``mtbf_us``) then exponential repair (``mttr_us``),
     truncated to the trace duration. Same arguments, same schedule — the
     generated spec composes with every differential oracle in the suite.
+
+    Inputs are validated eagerly: a non-positive or NaN MTBF/MTTR would
+    otherwise surface as an opaque numpy error (or an infinite loop) deep
+    inside the exponential draws.
     """
+    def _need_pos(name, v):
+        if not (isinstance(v, (int, float)) and np.isfinite(v) and v > 0.0):
+            raise ValueError(f"{name} must be finite and > 0, got {v!r}")
+
+    def _need_nonneg(name, v):
+        if not (isinstance(v, (int, float)) and np.isfinite(v) and v >= 0.0):
+            raise ValueError(f"{name} must be finite and >= 0, got {v!r}")
+
+    _need_pos("mtbf_us", mtbf_us)
+    _need_pos("mttr_us", mttr_us)
+    _need_nonneg("duration_us", duration_us)
+    _need_nonneg("inflight_window_us", inflight_window_us)
+    _need_nonneg("retry_penalty_us", retry_penalty_us)
+    _need_nonneg("slow_bg_iops", slow_bg_iops)
+    if kind not in VALID_KINDS:
+        raise ValueError(f"unknown failure kind {kind!r} "
+                         f"(valid: {', '.join(VALID_KINDS)})")
+    if not (isinstance(error_rate, (int, float)) and np.isfinite(error_rate)
+            and 0.0 <= error_rate <= 1.0):
+        raise ValueError(f"error_rate must be in [0, 1], got {error_rate!r}")
+    if max_events_per_host < 0:
+        raise ValueError("max_events_per_host must be >= 0")
     events = []
     for hi, name in enumerate(host_names):
         rng = np.random.default_rng(

@@ -202,6 +202,53 @@ def test_seeded_error_bursts_are_reproducible():
     assert a.p999_us >= base.p999_us
 
 
+def test_replayed_queries_pay_error_bursts_in_the_failover_window():
+    # regression: queries replayed onto a replica after a crash physically
+    # re-execute at the crash instant. A burst on the replica that covers
+    # only that instant (no raw arrival falls inside it) must still charge
+    # them retries — judging burst membership by raw arrival alone missed
+    # every replayed query.
+    trace = _mt_trace(n=800)
+    sim = _cluster(k=2)
+    d = trace.duration_us
+    fs = FailureSpec(events=(
+        FailureEvent(host="h0", kind="crash", start_us=0.4 * d,
+                     end_us=0.5 * d, inflight_window_us=0.1 * d),
+        # a sliver of a window: covers the crash instant and nothing else
+        FailureEvent(host="h1", kind="io_errors", start_us=0.4 * d,
+                     end_us=0.4 * d + 1e-3, error_rate=1.0,
+                     retry_penalty_us=777.0),
+    ))
+    rep = sim.run(trace, failures=fs)
+    h1 = next(h for h in rep.hosts if h.name == "h1")
+    assert h1.replayed_in > 0
+    assert h1.io_error_retries == h1.replayed_in, \
+        "every replayed query re-executes at the crash instant, inside " \
+        "the burst"
+    # and the replay floors stay bit-invisible without crashes: a pure
+    # burst spec gives identical reports whether floors flow through or not
+    burst_only = FailureSpec(events=fs.events[1:])
+    _assert_reports_equal(sim.run(trace, failures=burst_only),
+                          sim.run(trace, failures=burst_only))
+
+
+def test_replay_window_retries_parity_across_modes():
+    trace = _mt_trace(n=800)
+    sim = _cluster(k=2)
+    d = trace.duration_us
+    fs = FailureSpec(events=(
+        FailureEvent(host="h0", kind="crash", start_us=0.4 * d,
+                     end_us=0.5 * d, inflight_window_us=0.1 * d),
+        FailureEvent(host="h1", kind="io_errors", start_us=0.35 * d,
+                     end_us=0.55 * d, error_rate=0.5,
+                     retry_penalty_us=500.0),
+    ))
+    serial = sim.run(trace, failures=fs)
+    thread = sim.run(trace, failures=fs, parallel="thread")
+    _assert_reports_equal(serial, thread)
+    assert serial.io_error_retries > 0
+
+
 def test_slow_window_degrades_the_host():
     trace = _mt_trace()
     sim = _cluster()
@@ -234,6 +281,31 @@ def test_failure_event_validation():
     with pytest.raises(ValueError):
         FailureEvent(host="h", kind="io_errors", start_us=0.0, end_us=1.0,
                      error_rate=1.5)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(mtbf_us=0.0), dict(mtbf_us=-1e5), dict(mtbf_us=float("nan")),
+    dict(mtbf_us=float("inf")), dict(mttr_us=0.0),
+    dict(mttr_us=float("nan")), dict(kind="meteor"),
+    dict(error_rate=-0.1), dict(error_rate=1.5),
+    dict(error_rate=float("nan")), dict(retry_penalty_us=-1.0),
+    dict(slow_bg_iops=float("inf")), dict(inflight_window_us=-1.0),
+    dict(max_events_per_host=-1),
+])
+def test_seeded_failures_rejects_bad_inputs(kw):
+    with pytest.raises(ValueError):
+        seeded_failures(["h0", "h1"], 2e6, **kw)
+
+
+def test_seeded_failures_edge_inputs_are_fine():
+    # zero duration / zero event budget: valid, empty schedules
+    assert seeded_failures(["h0"], 0.0).events == ()
+    assert seeded_failures(["h0"], 2e6, max_events_per_host=0).events == ()
+    assert seeded_failures([], 2e6).events == ()
+    # integer arguments are accepted (isinstance check covers int)
+    spec = seeded_failures(["h0"], 2_000_000, mtbf_us=500_000,
+                           mttr_us=100_000, seed=1)
+    assert all(e.end_us <= 2_000_000 for e in spec.events)
 
 
 # -- degraded-mode serving ----------------------------------------------------

@@ -1,0 +1,431 @@
+"""Data-integrity plane differential suite (devices/integrity.py +
+runtime/redundancy.py).
+
+The contract mirrors every other seeded plane in this repo:
+
+* an *inert* plane (uber=0, hedging off, no device loss) attached to a host
+  is bit-invisible — latency samples and reports equal the vanilla run
+  exactly, in both analytic and sampled latency modes;
+* with checksums on, corruption never reaches data: pooled output vectors
+  on a materialized store are bit-identical to the clean run; with
+  checksums *off* the same injection visibly poisons them (proving the
+  errors are real, not bookkeeping);
+* counters are conserved and deterministic: a mid-trace ``device_loss``
+  run completes with ``rows_lost == rows_rebuilt``, and corruption/repair
+  sums are identical across serial / ``parallel="thread"`` /
+  ``parallel="process"`` and across streamed vs materialized traces
+  (hypothesis wrappers via ``hyp_compat`` + always-on seeded fallbacks);
+* hedged reads cut the sampled-mode tail, never the correctness.
+"""
+import dataclasses
+import functools
+import math
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+
+from repro.core import DEVICES, SDMConfig, SDMEmbeddingStore, \
+    sample_table_metas
+from repro.core.power import HW_AN, HW_SS
+from repro.devices.integrity import (IntegritySpec, IntegrityStats,
+                                     MediaErrorModel, row_checksums,
+                                     verify_rows)
+from repro.runtime.cluster import ClusterConfig, ClusterSim, HostSim, HostSpec
+from repro.runtime.redundancy import (RebuildStream, RedundancyPlane,
+                                      ReplicationSpec)
+from repro.workloads import ARCHETYPES, build_trace
+from repro.workloads.failures import FailureEvent, FailureSpec
+from repro.workloads.stream import TraceStream
+
+
+@functools.lru_cache(maxsize=None)
+def _trace(arch="zipf_steady", n=600, seed=0):
+    return build_trace(dataclasses.replace(ARCHETYPES[arch],
+                                           num_queries=n, seed=seed))
+
+
+def _spec(uber=1e-3, mode="analytic", **integ_kw):
+    return HostSpec("a", HW_SS, latency_mode=mode,
+                    integrity=IntegritySpec(uber=uber, **integ_kw),
+                    redundancy=ReplicationSpec(k=2))
+
+
+# -- spec validation ----------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(uber=-0.1), dict(uber=1.5), dict(uber=float("nan")),
+    dict(wear_scale=-1.0), dict(disturb_scale=float("inf")),
+    dict(disturb_groups=0), dict(retry_ladder=()),
+    dict(retry_ladder=(1.0, float("nan"))),
+    dict(retry_success=0.0), dict(retry_success=1.5),
+    dict(refetch_penalty=-1.0),
+])
+def test_integrity_spec_validation(kw):
+    with pytest.raises(ValueError):
+        IntegritySpec(**kw)
+
+
+@pytest.mark.parametrize("kw", [
+    dict(k=0), dict(hedge_after_us=0.0), dict(hedge_after_us=-5.0),
+    dict(hedge_after_us=float("nan")), dict(rebuild_rows_per_wave=0),
+    dict(rebuild_gap_us=0.0), dict(rebuild_service_factor=float("nan")),
+    dict(rebuild_iops=-1.0),
+])
+def test_replication_spec_validation(kw):
+    with pytest.raises(ValueError):
+        ReplicationSpec(**kw)
+
+
+# -- checksum arithmetic ------------------------------------------------------
+
+def test_row_checksums_detect_any_single_bit_flip():
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((6, 16)).astype(np.float32)
+    cs = row_checksums(rows)
+    assert np.array_equal(cs, row_checksums(rows.copy()))  # deterministic
+    assert verify_rows(rows, cs).all()
+    for r, c, bit in ((0, 0, 0), (2, 7, 13), (5, 15, 31)):
+        bad = rows.copy()
+        flip = bad[r].view(np.uint32)
+        flip[c] ^= np.uint32(1 << bit)
+        ok = verify_rows(bad, cs)
+        assert not ok[r], f"flip bit {bit} of [{r},{c}] went undetected"
+        assert ok[np.arange(6) != r].all(), "only the flipped row fails"
+
+
+def test_checksums_distinguish_row_position():
+    # same values, swapped columns -> different checksum (position-mixed)
+    row = np.arange(8, dtype=np.float32)[None]
+    swapped = row[:, ::-1].copy()
+    assert row_checksums(row)[0] != row_checksums(swapped)[0]
+
+
+# -- media-error model --------------------------------------------------------
+
+def test_wear_and_disturb_raise_p_corrupt():
+    spec = IntegritySpec(uber=1e-4, wear_scale=0.5, disturb_scale=2.0,
+                         disturb_groups=1)
+    m = MediaErrorModel(spec, DEVICES["nand_flash"], seed=1)
+    p0 = m.p_corrupt(0)
+    assert p0 == pytest.approx(1e-4)
+    m.observe_update(waves=10, chunk_bytes=1 << 30)   # 10 GiB of writes
+    p1 = m.p_corrupt(0)
+    assert p1 > p0
+    m.note_reads(2_000_000)                            # heavy read disturb
+    p2 = m.p_corrupt(0)
+    assert p2 > p1
+    # a refresh wave decays the disturb counters (isolated from the wear it
+    # also adds: wear_scale=0 here)
+    d = MediaErrorModel(IntegritySpec(uber=1e-4, disturb_scale=2.0,
+                                      disturb_groups=1),
+                        DEVICES["nand_flash"], seed=1)
+    d.note_reads(2_000_000)
+    hot = d.p_corrupt(0)
+    d.observe_update(waves=1, chunk_bytes=1 << 30)
+    assert d.p_corrupt(0) < hot
+
+
+def test_retry_ladder_counters_and_latency():
+    spec = IntegritySpec(uber=1.0, retry_ladder=(1.0, 2.0),
+                         retry_success=1.0)
+    m = MediaErrorModel(spec, DEVICES["nand_flash"], seed=3)
+    stats = IntegrityStats()
+    lat = m.recover_rows(5, stats)
+    # retry_success=1.0: every row recovers on the first step
+    assert stats.corrupt_reads == 5 and stats.retry_steps == 5
+    assert stats.retry_recovered == 5 and stats.repair_ios == 5
+    assert stats.refetch_reads == 0 and lat > 0.0
+
+
+def test_exhausted_ladder_falls_back_to_replica_then_refetch():
+    dev = DEVICES["nand_flash"]
+    # retry_success ~ 0 never recovers in-ladder (validated > 0, so tiny)
+    spec = IntegritySpec(uber=1.0, retry_ladder=(1.0,), retry_success=1e-12)
+    m = MediaErrorModel(spec, dev, seed=4)
+    s1 = IntegrityStats()
+    m.recover_rows(8, s1, replica_p=0.0)     # clean replica always saves it
+    assert s1.replica_reads == 8 and s1.refetch_reads == 0
+    m2 = MediaErrorModel(spec, dev, seed=4)
+    s2 = IntegrityStats()
+    m2.recover_rows(8, s2, replica_p=-1.0)   # no replica -> SM re-fetch
+    assert s2.refetch_reads == 8 and s2.replica_reads == 0
+
+
+def test_checksums_off_counts_undetected_and_is_free():
+    spec = IntegritySpec(uber=1.0, checksums=False)
+    m = MediaErrorModel(spec, DEVICES["nand_flash"], seed=5)
+    stats = IntegrityStats()
+    assert m.recover_rows(7, stats) == 0.0
+    assert stats.undetected == 7 and stats.corrupt_reads == 0
+
+
+def test_media_model_is_seed_deterministic():
+    spec = IntegritySpec(uber=0.01)
+    a = MediaErrorModel(spec, DEVICES["nand_flash"], seed=9)
+    b = MediaErrorModel(spec, DEVICES["nand_flash"], seed=9)
+    n = np.array([40, 0, 17, 99])
+    assert np.array_equal(a.draw_corrupt(n, 0.05), b.draw_corrupt(n, 0.05))
+    sa, sb = IntegrityStats(), IntegrityStats()
+    assert a.recover_rows(4, sa, 0.1) == b.recover_rows(4, sb, 0.1)
+    assert dataclasses.asdict(sa) == dataclasses.asdict(sb)
+
+
+def test_rebuild_stream_paces_and_exhausts():
+    rep = ReplicationSpec(rebuild_rows_per_wave=100, rebuild_gap_us=10.0)
+    rb = RebuildStream(rep, DEVICES["nand_flash"])
+    assert not rb.active
+    rb.start(at_us=5.0, rows=250)
+    waves = list(rb.pop_until(1000.0))
+    assert [at for at, _ in waves] == [15.0, 25.0, 35.0]
+    assert rb.rows_done == 250 and not rb.active
+    assert math.isinf(rb.next_us)
+    assert list(rb.pop_until(2000.0)) == []   # exhausted stays exhausted
+
+
+# -- inert plane == vanilla, bit for bit --------------------------------------
+
+@pytest.mark.parametrize("mode", ["analytic", "sampled"])
+def test_inert_plane_is_bit_invisible(mode):
+    tr = _trace()
+    metas = tr.all_metas()
+    base = HostSpec("a", HW_SS, latency_mode=mode)
+    prot = dataclasses.replace(base, integrity=IntegritySpec(uber=0.0),
+                               redundancy=ReplicationSpec(k=2))
+    s0 = HostSim(base, metas, 300.0, seed=7)
+    s1 = HostSim(prot, metas, 300.0, seed=7)
+    s0.run_trace(tr, 64, 0.0, True)
+    s1.run_trace(tr, 64, 0.0, True)
+    assert np.array_equal(np.asarray(s0.sched.p_lat),
+                          np.asarray(s1.sched.p_lat))
+    r0, r1 = s0.report(tr.duration_us), s1.report(tr.duration_us)
+    assert r0.p99_us == r1.p99_us and r0.achieved_iops == r1.achieved_iops
+    assert r1.corrupt_reads == 0 and r1.repair_ios == 0
+    assert r1.rows_lost == 0 and r1.hedged_reads == 0
+
+
+def test_nonzero_uber_moves_counters_and_latency():
+    tr = _trace()
+    metas = tr.all_metas()
+    s1 = HostSim(_spec(uber=2e-3), metas, 300.0, seed=7)
+    s1.run_trace(tr, 64, 0.0, True)
+    r = s1.report(tr.duration_us)
+    assert r.corrupt_reads > 0 and r.retry_steps > 0 and r.repair_ios > 0
+    # recovery chains only ever add latency — visible at the IO layer, below
+    # the host's item-compute floor
+    clean = _payload_store()
+    prot = _payload_store(integrity=IntegritySpec(uber=0.2),
+                          redundancy=ReplicationSpec(k=2))
+    lat_c = lat_p = 0.0
+    for q in [clean.synth_query() for _ in range(40)]:
+        for tid, idx in q.items():
+            rc = clean.lookup_pool(tid, idx)
+            rp = prot.lookup_pool(tid, idx)
+            assert rp["latency_us"] >= rc["latency_us"]
+            lat_c += rc["latency_us"]
+            lat_p += rp["latency_us"]
+    assert lat_p > lat_c
+
+
+def test_integrity_runs_are_seed_reproducible():
+    tr = _trace()
+    metas = tr.all_metas()
+    reps = []
+    for _ in range(2):
+        s = HostSim(_spec(uber=2e-3), metas, 300.0, seed=7)
+        s.run_trace(tr, 64, 0.0, True)
+        reps.append(dataclasses.asdict(s.report(tr.duration_us)))
+    assert reps[0] == reps[1]
+
+
+# -- end-to-end: checksums keep pooled outputs clean --------------------------
+
+def _payload_store(integrity=None, redundancy=None):
+    rng = np.random.default_rng(0)
+    metas = sample_table_metas(
+        rng, num_user=8, num_item=4, user_dim_bytes=(90, 172),
+        item_dim_bytes=(90, 172), user_pool=12, item_pool=8,
+        total_bytes=2e9)
+    cfg = SDMConfig(fm_cache_bytes=1 << 20, pooled_cache_bytes=0,
+                    integrity=integrity, redundancy=redundancy)
+    return SDMEmbeddingStore(metas, DEVICES["nand_flash"], cfg,
+                             seed=1, materialize_dim=8)
+
+
+def test_checksummed_pooled_outputs_match_clean_run_bit_exactly():
+    clean = _payload_store()
+    prot = _payload_store(integrity=IntegritySpec(uber=0.2),
+                          redundancy=ReplicationSpec(k=2))
+    queries = [clean.synth_query() for _ in range(40)]
+    for q in queries:
+        for tid, idx in q.items():
+            a = clean.lookup_pool(tid, idx)["vector"]
+            b = prot.lookup_pool(tid, idx)["vector"]
+            if a is not None:
+                assert np.array_equal(a, b), \
+                    "detected+recovered corruption must never reach data"
+    assert prot.io.integrity.stats.corrupt_reads > 0, \
+        "the injection must have fired"
+
+
+def test_unchecksummed_corruption_poisons_pooled_outputs():
+    clean = _payload_store()
+    silent = _payload_store(
+        integrity=IntegritySpec(uber=0.5, checksums=False),
+        redundancy=ReplicationSpec(k=2))
+    queries = [clean.synth_query() for _ in range(40)]
+    diffs = 0
+    for q in queries:
+        for tid, idx in q.items():
+            a = clean.lookup_pool(tid, idx)["vector"]
+            b = silent.lookup_pool(tid, idx)["vector"]
+            if a is not None and not np.array_equal(a, b):
+                diffs += 1
+    assert diffs > 0, \
+        "with checksums off the same injection must reach pooled outputs"
+
+
+# -- device loss: completes, conserves, stays clean ---------------------------
+
+def _loss_cluster(mode="analytic", count=2):
+    spec = HostSpec("a", HW_SS, count=count, latency_mode=mode,
+                    integrity=IntegritySpec(uber=1e-3),
+                    redundancy=ReplicationSpec(k=2,
+                                               rebuild_rows_per_wave=2048,
+                                               rebuild_gap_us=50.0))
+    return ClusterSim(ClusterConfig((spec,), routing="round_robin"))
+
+
+def _loss_spec(trace, host="a#0", frac=0.3):
+    d = trace.duration_us
+    return FailureSpec(events=(FailureEvent(
+        host=host, kind="device_loss", start_us=frac * d,
+        end_us=frac * d + 1.0),))
+
+
+@pytest.mark.parametrize("mode", ["analytic", "sampled"])
+def test_device_loss_conserves_rows_and_queries(mode):
+    tr = _trace(n=900)
+    sim = _loss_cluster(mode)
+    rep = sim.run(tr, failures=_loss_spec(tr))
+    assert rep.queries == len(tr), "no query lost across the device loss"
+    assert rep.rows_lost > 0
+    assert rep.rows_lost == rep.rows_rebuilt, \
+        "rebuild must re-replicate exactly what the loss dropped"
+    assert rep.repair_ios > 0
+
+
+def test_device_loss_with_checksums_keeps_outputs_clean():
+    # protected store + device loss mid-trace: pooled outputs still equal
+    # the clean store's, bit for bit (replica reads are reads, not data
+    # rewrites)
+    clean = _payload_store()
+    prot = _payload_store(integrity=IntegritySpec(uber=0.2),
+                          redundancy=ReplicationSpec(k=2))
+    queries = [clean.synth_query() for _ in range(30)]
+    for i, q in enumerate(queries):
+        if i == 10:
+            prot.io.integrity.device_loss(0.0)
+        for tid, idx in q.items():
+            a = clean.lookup_pool(tid, idx)["vector"]
+            b = prot.lookup_pool(tid, idx)["vector"]
+            if a is not None:
+                assert np.array_equal(a, b)
+    ps = prot.io.integrity.stats
+    assert ps.rows_lost > 0 and ps.replica_reads > 0
+
+
+def test_zero_failure_spec_with_integrity_is_bit_exact():
+    tr = _trace(n=900)
+    sim = _loss_cluster()
+    a = sim.run(tr)
+    b = sim.run(tr, failures=FailureSpec())
+    assert [dataclasses.asdict(h) for h in a.hosts] == \
+        [dataclasses.asdict(h) for h in b.hosts]
+
+
+# -- parity: serial == thread == process, streamed == materialized ------------
+
+_PARITY_FIELDS = ("corrupt_reads", "retry_steps", "hedged_reads",
+                  "repair_ios", "rows_lost", "rows_rebuilt",
+                  "queries", "p99_us")
+
+
+def _check_parity(arch: str, seed: int) -> None:
+    spec = dataclasses.replace(ARCHETYPES[arch], num_queries=600, seed=seed)
+    stream = TraceStream(spec, piece=250, block=128)
+    tr = stream.materialize()
+    sim = _loss_cluster()
+    fs = _loss_spec(tr)
+    serial = sim.run(tr, failures=fs)
+    assert serial.corrupt_reads > 0       # the property must bite
+    for rep in (sim.run(tr, failures=fs, parallel="thread"),
+                sim.run_stream(stream, failures=fs)):
+        for f in _PARITY_FIELDS:
+            assert getattr(rep, f) == getattr(serial, f), f
+
+
+_PARITY_ARCHES = ["zipf_steady", "multi_tenant", "bursty"]
+
+
+@given(arch=st.sampled_from(_PARITY_ARCHES), seed=st.integers(0, 2**16))
+@settings(max_examples=6, deadline=None)
+def test_integrity_parity_hypothesis(arch, seed):
+    _check_parity(arch, seed)
+
+
+@pytest.mark.parametrize("arch", _PARITY_ARCHES)
+def test_integrity_parity_seeded(arch):
+    _check_parity(arch, seed=11)
+
+
+@pytest.mark.slow
+def test_integrity_parity_serial_vs_process():
+    tr = _trace(n=900)
+    sim = _loss_cluster()
+    fs = _loss_spec(tr)
+    serial = sim.run(tr, failures=fs)
+    proc = sim.run(tr, failures=fs, parallel="process")
+    for f in _PARITY_FIELDS:
+        assert getattr(proc, f) == getattr(serial, f), f
+
+
+def test_streamed_warmup_passes_match_materialized():
+    spec = dataclasses.replace(ARCHETYPES["zipf_steady"], num_queries=600)
+    stream = TraceStream(spec, piece=250, block=128)
+    tr = stream.materialize()
+    sim = _loss_cluster()
+    a = sim.run(tr, passes=2, warmup=True)
+    b = sim.run_stream(stream, passes=2, warmup=True)
+    for f in _PARITY_FIELDS:
+        assert getattr(a, f) == getattr(b, f), f
+
+
+# -- hedged reads cut the sampled tail ----------------------------------------
+
+def _hedge_report(hedge_after_us):
+    # device_tail.py's regime: bursty traffic over the Nand depth knee, the
+    # accelerator sped up so the item-compute floor doesn't mask the SM tail
+    spec_w = ARCHETYPES["bursty"]
+    tr = build_trace(dataclasses.replace(
+        spec_w, num_queries=1200,
+        arrival=dataclasses.replace(spec_w.arrival, rate_qps=6_000.0)))
+    fast = dataclasses.replace(HW_AN, accel_qps=5_000.0)
+    spec = HostSpec("a", fast, device="nand_flash", latency_mode="sampled",
+                    integrity=IntegritySpec(uber=0.0),
+                    redundancy=ReplicationSpec(k=2,
+                                               hedge_after_us=hedge_after_us))
+    s = HostSim(spec, tr.all_metas(), 10_000.0, seed=0)
+    s.run_trace(tr, 32, 0.0, True)
+    return s.report(tr.duration_us)
+
+
+def test_hedged_reads_cut_the_nand_tail():
+    plain = _hedge_report(math.inf)
+    hedged = _hedge_report(DEVICES["nand_flash"].base_latency_us * 3.0)
+    assert hedged.hedged_reads > 0
+    assert hedged.p99_us < plain.p99_us, \
+        "a hedge at 3x base latency must cut the sampled Nand p99"
+    # hedging duplicates IOs, it never drops queries
+    assert hedged.queries == plain.queries
