@@ -1,7 +1,8 @@
 PYTHONPATH := src:.
 PY := PYTHONPATH=$(PYTHONPATH) python
 
-.PHONY: test test-fast bench-smoke bench-json bench-guard docs-check check
+.PHONY: test test-fast bench-smoke bench-json bench-guard docs-check \
+	obs-lint obs-guard obs-report check
 
 # the full suite, slow markers included (plain `pytest -x -q` — the tier-1
 # invocation — skips slow tests so it stays well under 5 minutes)
@@ -38,4 +39,17 @@ bench-guard:
 docs-check:
 	$(PY) tools/docs_check.py
 
-check: docs-check test
+# telemetry guards: counter catalog <-> report dataclasses, and enabled
+# telemetry staying under 10% overhead on the warm perf_trace path
+obs-lint:
+	$(PY) tools/obs_lint.py
+
+obs-guard:
+	$(PY) tools/obs_guard.py
+
+# run report + Chrome trace + metrics JSON from the fleet failover demo
+obs-report:
+	$(PY) tools/obs_report.py --run fleet --out obs_report.txt \
+		--trace-out obs_trace.json --json-out obs_metrics.json
+
+check: docs-check obs-lint test

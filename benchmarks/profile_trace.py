@@ -1,15 +1,24 @@
-"""cProfile the warm columnar serve hot path — data for the next perf PR.
+"""cProfile + telemetry cross-check of the warm columnar serve hot path.
 
-Profiles one warm ``ClusterSim.run(passes=2, warmup=True)`` replay of the
-``perf_trace`` acceptance workload (after an unprofiled run has populated
-the trace's grouping/plan-factor caches, i.e. the steady-state regime the
-us/query number measures) and prints the top-N functions by cumulative and
-by self time. Future perf work should start from this table instead of
-guesses.
+Two jobs in one harness:
+
+* **profile** — one warm ``ClusterSim.run(passes=2, warmup=True)`` replay of
+  the ``perf_trace`` acceptance workload (after an unprofiled run has
+  populated the trace's grouping/plan-factor caches, i.e. the steady-state
+  regime the us/query number measures), printing the top-N functions by
+  cumulative and by self time. Future perf work should start from this
+  table instead of guesses.
+* **telemetry cross-check** — a second, telemetry-enabled run of the same
+  workload validates the observability plane against the scheduler's exact
+  latency samples: for each checked percentile, ``ServeScheduler
+  .percentile(p)`` must fall inside ``serve.latency_us``'s
+  ``percentile_bounds(p)`` (the log2-bucket histogram's bounded-error
+  contract), and the run's span recorder exports a Chrome trace-event JSON
+  (``--trace-out``) loadable in Perfetto.
 
 Run:   PYTHONPATH=src:. python benchmarks/profile_trace.py [--top N]
-                                                           [--queries N]
-Also exposed as ``run()`` so it can be driven programmatically.
+           [--queries N] [--trace-out F] [--no-profile]
+Also exposed as ``run()`` / ``cross_check()`` so tests can drive it.
 """
 from __future__ import annotations
 
@@ -19,15 +28,21 @@ import dataclasses
 import io
 import pstats
 
-from repro.runtime.cluster import ClusterSim
+from repro.runtime.cluster import ClusterSim, HostSim
 from repro.workloads import ARCHETYPES, build_trace
+
+CHECK_PERCENTILES = (50.0, 95.0, 99.0, 99.9)
+
+
+def _trace(num_queries: int):
+    return build_trace(dataclasses.replace(
+        ARCHETYPES["zipf_steady"], num_queries=num_queries))
 
 
 def run(num_queries: int = 20_000, top: int = 25,
         out=None) -> pstats.Stats:
     from benchmarks.perf_trace import _cluster
-    trace = build_trace(dataclasses.replace(
-        ARCHETYPES["zipf_steady"], num_queries=num_queries))
+    trace = _trace(num_queries)
     cluster: ClusterSim = _cluster()
     cluster.run(trace, passes=2, warmup=True)    # warm the caches unprofiled
     prof = cProfile.Profile()
@@ -45,12 +60,58 @@ def run(num_queries: int = 20_000, top: int = 25,
     return stats
 
 
+def cross_check(num_queries: int = 20_000, trace_out=None) -> dict:
+    """Telemetry-enabled run of the acceptance workload; asserts the
+    histogram's percentile bounds contain the scheduler's exact
+    percentiles, optionally writes the Chrome trace."""
+    from benchmarks.perf_trace import _cluster
+    cluster = _cluster()
+    spec = dataclasses.replace(cluster.specs[0], telemetry=True)
+    trace = _trace(num_queries)
+    sim = HostSim(spec, trace.all_metas(), cluster.cfg.latency_target_us,
+                  seed=cluster.cfg.seed)
+    sim.run_trace(trace, cluster.cfg.chunk, 0.0, True)   # warm the caches
+    sim.reset_measurement()
+    sim.run_trace(trace, cluster.cfg.chunk, 0.0, True)   # measured replay
+
+    hist = sim.telemetry.registry.hist("serve.latency_us")
+    assert hist.count == len(sim.sched.p_lat) == num_queries, \
+        f"histogram saw {hist.count} samples for {num_queries} queries"
+    checks = {}
+    for p in CHECK_PERCENTILES:
+        exact = sim.sched.percentile(p)
+        lo, hi = hist.percentile_bounds(p)
+        assert lo <= exact <= hi, \
+            (f"p{p}: scheduler {exact} outside histogram bounds "
+             f"[{lo}, {hi}]")
+        checks[f"p{p}"] = {"exact": round(exact, 3), "lo": lo, "hi": hi}
+
+    if trace_out:
+        from repro.obs import write_chrome_trace
+        write_chrome_trace(sim.telemetry, trace_out)
+    return {"queries": num_queries, "spans": len(sim.telemetry.tracer.events),
+            "checks": checks}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--top", type=int, default=25)
     ap.add_argument("--queries", type=int, default=20_000)
+    ap.add_argument("--trace-out", default=None,
+                    help="write the telemetry run's Chrome trace here")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="skip the cProfile pass (cross-check only)")
     args = ap.parse_args()
-    run(num_queries=args.queries, top=args.top)
+    if not args.no_profile:
+        run(num_queries=args.queries, top=args.top)
+    res = cross_check(num_queries=args.queries, trace_out=args.trace_out)
+    for name, c in res["checks"].items():
+        print(f"profile_trace: {name} exact={c['exact']} in "
+              f"[{c['lo']}, {c['hi']}] OK")
+    print(f"profile_trace: histogram bounds contain scheduler percentiles "
+          f"({res['spans']} spans recorded)")
+    if args.trace_out:
+        print(f"profile_trace: wrote {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -136,6 +136,7 @@ class IOEngine:
         # latency calc and for corruption/retry/hedging after it. None (the
         # default) leaves every path below untouched, bit for bit.
         self.integrity = None
+        self.telemetry = None   # obs handle; None leaves every path untouched
         self.total_ios = 0
         self.total_bus_bytes = 0
         self.total_wanted_bytes = 0
@@ -172,6 +173,9 @@ class IOEngine:
         self.total_ios += num_ios
         self.total_bus_bytes += bus
         self.total_wanted_bytes += num_ios * row_bytes
+        if self.telemetry is not None:
+            self.telemetry.registry.inc("io.submissions")
+            self.telemetry.registry.observe("io.lat_us", lat)
         return lat, bus
 
     def submit_batch(self, num_ios: np.ndarray, row_bytes: int, bg_iops: float,
@@ -222,6 +226,9 @@ class IOEngine:
         self.total_ios += int(n.sum())
         self.total_bus_bytes += int(b.sum())
         self.total_wanted_bytes += int(n.sum()) * row_bytes
+        if self.telemetry is not None:
+            self.telemetry.registry.inc("io.submissions", int(nz.sum()))
+            self.telemetry.registry.observe_many("io.lat_us", lat[nz])
         return lat, bus
 
     def submit_batch_multi(self, num_ios: np.ndarray, row_bytes: np.ndarray,
@@ -273,6 +280,9 @@ class IOEngine:
         self.total_ios += int(n.sum())
         self.total_bus_bytes += int(b.sum())
         self.total_wanted_bytes += int((n * rb).sum())
+        if self.telemetry is not None:
+            self.telemetry.registry.inc("io.submissions", int(nz.sum()))
+            self.telemetry.registry.observe_many("io.lat_us", lat[nz])
         return lat, bus
 
     @property

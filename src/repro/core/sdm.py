@@ -126,6 +126,8 @@ class SDMEmbeddingStore:
                 max(total, 1), seed=cfg.sim_seed, sim=sim)
         self.rng = np.random.default_rng(seed)
         self.stats = QueryStats()
+        self.telemetry = None      # obs handle; None = bit-invisible
+        self.last_tier = ""        # data-plane tier that served the last chunk
         self.batch_fallbacks = 0   # columnar path dropped to the exact slow path
         self._pooled_touch: list = []  # pooled-LRU replay scratch
         self._chunk_plans: Dict = {}   # resident-chunk plan cache (columnar)
@@ -539,8 +541,19 @@ class SDMEmbeddingStore:
                     store.move_to_end(k)
         self._pooled_touch = []
 
+        self._note_tier("live")
         self._acc_latency(sm_lat)
         return sm_lat, ios_q
+
+    def _note_tier(self, tier: str) -> None:
+        """Record which data-plane tier served the chunk. Under the
+        ``diag.`` namespace: tier engagement depends on replay-cache
+        topology (streamed serving drops plan caches per piece), so it is
+        excluded from the streamed == materialized registry parity
+        contract while results stay bit-identical."""
+        if self.telemetry is not None:
+            self.last_tier = tier
+            self.telemetry.registry.inc("diag.tier." + tier)
 
     # -- fused replay tiers ---------------------------------------------------
     #
@@ -638,6 +651,7 @@ class SDMEmbeddingStore:
         if not ctids and not usig:
             # trivial tier: FM_DIRECT-only trace — no SM IO, no cache state
             sm_lat = np.zeros(nq, np.float64)
+            self._note_tier("trivial")
             self._acc_latency(sm_lat)
             return sm_lat, np.zeros(nq, np.int64)
         fact = chunk.plan_factor_peek(ctids)
@@ -703,6 +717,7 @@ class SDMEmbeddingStore:
             np.maximum.at(sm_lat, u_aq, lats)
             ios_q = uq_ios.copy()
         self.chunk_plan_hits += 1
+        self._note_tier("resident")
         self._acc_latency(sm_lat)
         return sm_lat, ios_q
 
@@ -744,6 +759,7 @@ class SDMEmbeddingStore:
         self._virgin = (weakref.ref(chunk.parent), chunk.csize,
                         chunk.start + chunk.csize, rc.clock, rc.filled)
         self.chunk_plan_hits += 1
+        self._note_tier("virgin")
         self._acc_latency(sm_lat)
         return sm_lat, ios_q
 
@@ -1050,6 +1066,7 @@ class SDMEmbeddingStore:
         """Exact sequential path for eviction-bound chunks (nothing has been
         mutated when this is taken, so it is bit-exact)."""
         self.batch_fallbacks += 1
+        self._note_tier("fallback")
         if arrivals_us is None:
             stats = [self.serve_query(r, bg_iops) for r in chunk.requests()]
         else:

@@ -35,6 +35,7 @@ from repro.core.io_sim import DEVICES
 from repro.core.locality import TableMeta, sticky_route
 from repro.core.power import HostConfig
 from repro.core.sdm import QueryStats, SDMConfig, SDMEmbeddingStore
+from repro.obs import HOST_COUNTERS, make_telemetry, merge_telemetry
 from repro.runtime.control import (ControlledHost, DegradePolicy,
                                    HostControl, build_controls,
                                    rewrite_assignment)
@@ -86,6 +87,10 @@ class HostSpec:
     # exact vanilla IO path, bit for bit.
     integrity: object = None
     redundancy: object = None
+    # Telemetry plane (src/repro/obs/): None (default) is bit-invisible —
+    # no registry, no spans, zero RNG consumed, reports byte-identical.
+    # True enables with the default ObsConfig; an obs.ObsConfig sets knobs.
+    telemetry: object = None
 
     @property
     def mesh_devices(self) -> int:
@@ -103,6 +108,10 @@ class ClusterConfig:
     chunk: int = 32                        # serve_batch chunk size
     latency_target_us: float = 10_000.0
     seed: int = 0
+    # Cluster-level telemetry default: applied to every HostSpec whose own
+    # ``telemetry`` is None (a spec-level setting wins). Same values as
+    # HostSpec.telemetry.
+    telemetry: object = None
 
 
 @dataclasses.dataclass
@@ -162,6 +171,10 @@ class ClusterReport:
     p95_us: float
     p99_us: float
     p999_us: float = 0.0                   # p99.9 — the planner's SLO knob
+    # Merged per-host obs.Telemetry (None when no host had telemetry
+    # enabled). Deterministic: hosts fold in host-index order, so the
+    # merged registry is bit-equal across serial/thread/process runs.
+    telemetry: object = None
 
     @property
     def queries(self) -> int:
@@ -179,61 +192,11 @@ class ClusterReport:
     def deferred(self) -> int:
         return sum(h.deferred for h in self.hosts)
 
-    # -- control-plane counter rollups (zero when no control is active) --
-
-    @property
-    def crashes(self) -> int:
-        return sum(h.crashes for h in self.hosts)
-
-    @property
-    def failed_over(self) -> int:
-        return sum(h.failed_over_in for h in self.hosts)
-
-    @property
-    def replayed(self) -> int:
-        return sum(h.replayed_in for h in self.hosts)
-
-    @property
-    def stale_served(self) -> int:
-        return sum(h.stale_served for h in self.hosts)
-
-    @property
-    def shed_queries(self) -> int:
-        return sum(h.shed_queries for h in self.hosts)
-
-    @property
-    def io_error_retries(self) -> int:
-        return sum(h.io_error_retries for h in self.hosts)
-
-    @property
-    def degraded_chunks(self) -> int:
-        return sum(h.degraded_chunks for h in self.hosts)
-
-    # -- data-integrity counter rollups (zero when no plane is attached) --
-
-    @property
-    def corrupt_reads(self) -> int:
-        return sum(h.corrupt_reads for h in self.hosts)
-
-    @property
-    def retry_steps(self) -> int:
-        return sum(h.retry_steps for h in self.hosts)
-
-    @property
-    def hedged_reads(self) -> int:
-        return sum(h.hedged_reads for h in self.hosts)
-
-    @property
-    def repair_ios(self) -> int:
-        return sum(h.repair_ios for h in self.hosts)
-
-    @property
-    def rows_lost(self) -> int:
-        return sum(h.rows_lost for h in self.hosts)
-
-    @property
-    def rows_rebuilt(self) -> int:
-        return sum(h.rows_rebuilt for h in self.hosts)
+    # Control-plane and data-integrity counter rollups (crashes,
+    # failed_over, replayed, stale_served, ..., rows_rebuilt — zero when no
+    # plane is active) are generated below from the obs.HOST_COUNTERS
+    # catalog: one definition drives the HostReport field, the rollup here,
+    # and the registry metric name.
 
     def fleet_power(self, demand_qps: float,
                     tail: bool = False) -> FleetEstimate:
@@ -251,6 +214,21 @@ class ClusterReport:
         k = demand_qps / max(cap, 1e-9)
         return FleetEstimate(hosts=k * len(active),
                              power=k * sum(h.power for h in active))
+
+
+def _install_counter_rollups() -> None:
+    """Generate ClusterReport's per-counter sum rollups from the obs
+    catalog (replacing thirteen hand-written properties): every catalogued
+    HostReport counter gets a fleet-sum property under its rollup name."""
+    def _make(field):
+        def _get(self) -> int:
+            return sum(getattr(h, field) for h in self.hosts)
+        return _get
+    for field, rollup, _, _ in HOST_COUNTERS:
+        setattr(ClusterReport, rollup, property(_make(field)))
+
+
+_install_counter_rollups()
 
 
 class HostSim:
@@ -278,6 +256,24 @@ class HostSim:
         self.sched = ServeScheduler(self.store, ServeConfig(
             item_compute_us=item_us, latency_target_us=latency_target_us))
         self.engine = None               # device plane, see attach_engine
+        self.telemetry = make_telemetry(spec.telemetry, host=spec.name)
+        self._attach_telemetry()
+
+    def _attach_telemetry(self) -> None:
+        """Point every plane of this host at the (single) telemetry handle.
+        A None handle leaves all attributes None — every hook disabled."""
+        tel = self.telemetry
+        if tel is None:
+            return
+        self.store.telemetry = tel
+        self.sched.telemetry = tel
+        self.store.io.telemetry = tel
+        if self.store.io.sim is not None:
+            self.store.io.sim.telemetry = tel
+        if self.store.io.integrity is not None:
+            self.store.io.integrity.telemetry = tel
+        if self.engine is not None:
+            self.engine.telemetry = tel
 
     def attach_engine(self, tables: Dict[int, np.ndarray],
                       engine_cfg=None):
@@ -311,6 +307,9 @@ class HostSim:
             self.engine = ShardedServingEngine(
                 tables, dev, engine_cfg, mesh=make_embed_mesh(n),
                 layout=spec.shard_layout)
+        if self.telemetry is not None:
+            self.engine.telemetry = self.telemetry
+            self.engine.io.telemetry = self.telemetry
         return self.engine
 
     def run_trace(self, trace: Trace, chunk: int, bg_iops: float,
@@ -393,6 +392,11 @@ class HostSim:
             # same contract as reset_clock above not rewinding RNGs
             self.store.io.integrity.reset_stats()
         self.sched = ServeScheduler(self.store, self.sched.cfg)
+        if self.telemetry is not None:
+            # only the measurement replay lands in the run's telemetry;
+            # the fresh scheduler needs the handle re-attached
+            self.telemetry.reset()
+            self.sched.telemetry = self.telemetry
 
     def report(self, duration_us: float) -> HostReport:
         ios = self.store.stats.sm_ios
@@ -444,7 +448,65 @@ class HostSim:
             rep.repair_ios = ps.repair_ios
             rep.rows_lost = ps.rows_lost
             rep.rows_rebuilt = ps.rows_rebuilt
+        if self.telemetry is not None:
+            self._publish_telemetry(rep)
         return rep
+
+    def _publish_telemetry(self, rep: HostReport) -> None:
+        """Finalize-time registry publication. Everything here is absolute
+        (``set``/``gauge``, not ``inc``) so a repeated ``report()`` call is
+        idempotent; hot-path histograms, spans and tier counters were
+        recorded live during the replay."""
+        reg = self.telemetry.registry
+        s = self.store
+        reg.set("serve.queries", rep.queries)
+        reg.set("serve.deferred", rep.deferred)
+        reg.set("serve.sm_ios", rep.sm_ios)
+        reg.set("serve.batch_fallbacks", rep.batch_fallbacks)
+        reg.set("diag.chunk_plan_hits", s.chunk_plan_hits)
+        st = s.stats
+        reg.set("cache.row_hits", st.row_hits)
+        reg.set("cache.row_lookups", st.row_lookups)
+        reg.set("cache.pooled_hits", st.pooled_hits)
+        reg.set("cache.pooled_lookups", st.pooled_lookups)
+        if st.row_lookups:
+            reg.gauge("cache.row_hit_rate", st.row_hits / st.row_lookups)
+        if st.pooled_lookups:
+            reg.gauge("cache.pooled_hit_rate",
+                      st.pooled_hits / st.pooled_lookups)
+        reg.set("io.total_ios", s.io.total_ios)
+        reg.set("io.bus_bytes", s.io.total_bus_bytes)
+        reg.gauge("host.achieved_iops", rep.achieved_iops)
+        reg.gauge("host.iops_occupancy", rep.iops_occupancy)
+        reg.gauge("host.feasible_qps", rep.feasible_qps)
+        reg.gauge("host.power", rep.power)
+        sim = s.io.sim
+        if sim is not None:
+            reg.set("device.read_waves", sim.read_waves)
+            reg.set("device.read_ios", sim.read_ios)
+            reg.set("device.depth_collapses", sim.depth_collapses)
+            reg.set("device.smoothing_delay_us",
+                    int(sim.smoothing_delay_us))
+            if sim.update is not None:
+                reg.set("device.write_waves", sim.update.waves)
+                reg.set("device.gc_events", sim.update.gc_events)
+            read_u, write_u = sim.utilization()
+            reg.gauge("device.read_utilization", read_u)
+            reg.gauge("device.write_utilization", write_u)
+        integ = s.io.integrity
+        if integ is not None:
+            ps = integ.stats
+            reg.set("integrity.corrupt_reads", ps.corrupt_reads)
+            reg.set("integrity.retry_steps", ps.retry_steps)
+            reg.set("integrity.hedged_reads", ps.hedged_reads)
+            reg.set("integrity.repair_ios", ps.repair_ios)
+            reg.set("integrity.rows_lost", ps.rows_lost)
+            reg.set("integrity.rows_rebuilt", ps.rows_rebuilt)
+            reg.set("integrity.retry_recovered", ps.retry_recovered)
+            reg.set("integrity.replica_reads", ps.replica_reads)
+            reg.set("integrity.refetch_reads", ps.refetch_reads)
+            reg.set("integrity.hedge_wins", ps.hedge_wins)
+            reg.set("integrity.undetected", ps.undetected)
 
 
 def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
@@ -453,7 +515,7 @@ def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
                  duration_us: float,
                  ctl: Optional[HostControl] = None,
                  replay_at: Optional[np.ndarray] = None
-                 ) -> Tuple[HostReport, np.ndarray]:
+                 ) -> Tuple[HostReport, np.ndarray, object]:
     """All self-consistency passes for one host.
 
     Hosts are independent given routing: a pass feeds back only the host's
@@ -513,7 +575,7 @@ def _host_passes(spec: HostSpec, subset: Trace, metas: Sequence[TableMeta],
     rep = sim.report(duration_us)
     if chost is not None:
         rep = chost.finalize_report(rep)
-    return (rep, np.asarray(sim.sched.p_lat, np.float64))
+    return (rep, np.asarray(sim.sched.p_lat, np.float64), sim.telemetry)
 
 
 def _map_hosts(jobs: List[Tuple[int, tuple]], mode,
@@ -545,6 +607,10 @@ class ClusterSim:
         self.cfg = cfg
         self.specs: List[HostSpec] = []
         for spec in cfg.hosts:
+            if spec.telemetry is None and cfg.telemetry is not None:
+                # cluster-level default; a spec-level setting (including
+                # False = explicitly off) wins over it
+                spec = dataclasses.replace(spec, telemetry=cfg.telemetry)
             for i in range(spec.count):
                 name = spec.name if spec.count == 1 else f"{spec.name}#{i}"
                 self.specs.append(dataclasses.replace(spec, name=name, count=1))
@@ -642,10 +708,23 @@ class ClusterSim:
         else:
             results = {h: _host_passes(*args) for h, args in jobs}
         report = self._fleet_report(trace.name, results)
+        self._stamp_failover(report, fo, rp)
+        return report
+
+    @staticmethod
+    def _stamp_failover(report: ClusterReport, fo: Dict[str, int],
+                        rp: Dict[str, int]) -> None:
+        """Failover attribution lives in the routing rewrite, not the host
+        replay — stamp it onto the host reports after the fleet merge, and
+        mirror it into the merged registry (per-host registries cannot see
+        it, so the merge step owns these two counters)."""
         for hr in report.hosts:
             hr.failed_over_in = fo.get(hr.name, 0)
             hr.replayed_in = rp.get(hr.name, 0)
-        return report
+        if report.telemetry is not None:
+            reg = report.telemetry.registry
+            reg.set("control.failed_over_in", sum(fo.values()))
+            reg.set("control.replayed_in", sum(rp.values()))
 
     def run_stream(self, stream, *, passes: int = 1, warmup: bool = False,
                    bg_iops: Optional[Dict[str, float]] = None,
@@ -730,11 +809,10 @@ class ClusterSim:
             rep = sim.report(duration)
             if chosts[h] is not None:
                 rep = chosts[h].finalize_report(rep)
-            results[h] = (rep, np.asarray(sim.sched.p_lat, np.float64))
+            results[h] = (rep, np.asarray(sim.sched.p_lat, np.float64),
+                          sim.telemetry)
         report = self._fleet_report(stream.name, results)
-        for hr in report.hosts:
-            hr.failed_over_in = fo.get(hr.name, 0)
-            hr.replayed_in = rp.get(hr.name, 0)
+        self._stamp_failover(report, fo, rp)
         return report
 
     def _stream_replay(self, stream, sims: List[HostSim], hosts,
@@ -859,6 +937,7 @@ class ClusterSim:
             sim = HostSim(spec, metas, self.cfg.latency_target_us,
                           seed=self.cfg.seed)
             eng = sim.attach_engine(tables, engine_cfg)
+            tel = sim.telemetry
             lats = []
             for ch in subset.chunks(chunk):
                 _, sm_t, _ = eng.serve_columnar(ch.columnar, bg_iops)
@@ -881,25 +960,40 @@ class ClusterSim:
                 iops_occupancy=occ, feasible_qps=0.0,
                 power=spec.host.power, mesh_devices=spec.mesh_devices,
                 engine_hit_rate=eng.hit_rate)
-            results[h] = (rep, lat)
+            if tel is not None:
+                reg = tel.registry
+                reg.set("serve.queries", rep.queries)
+                reg.set("serve.sm_ios", rep.sm_ios)
+                reg.set("engine.mesh_devices", rep.mesh_devices)
+                reg.gauge("engine.hit_rate", rep.engine_hit_rate)
+                reg.gauge("host.achieved_iops", rep.achieved_iops)
+                reg.gauge("host.iops_occupancy", rep.iops_occupancy)
+                reg.observe_many("serve.latency_us", lat)
+            results[h] = (rep, lat, tel)
         return self._fleet_report(trace.name, results)
 
     def _fleet_report(self, name: str,
                       results: Dict[int, tuple]) -> ClusterReport:
-        """Assemble per-host ``(report, p_lat)`` results (keyed by host
-        index) into a ClusterReport; idle hosts get a zero placeholder."""
+        """Assemble per-host ``(report, p_lat[, telemetry])`` results (keyed
+        by host index) into a ClusterReport; idle hosts get a zero
+        placeholder. Per-host telemetry merges in host-index order, so the
+        merged registry is deterministic across execution modes."""
         reports = [results[h][0] if h in results
                    else HostReport(spec.name, 0, 0.0, 0.0, 0.0, 0, 0, 0.0,
                                    0.0, 0.0, spec.host.power)
                    for h, spec in enumerate(self.specs)]
         lat = np.concatenate([results[h][1] for h in sorted(results)
                               if results[h][1].size] or [np.zeros(1)])
+        tel = merge_telemetry(
+            [(self.specs[h].name, results[h][2])
+             for h in sorted(results) if len(results[h]) > 2])
         return ClusterReport(
             name=name, hosts=reports,
             p50_us=float(np.percentile(lat, 50)),
             p95_us=float(np.percentile(lat, 95)),
             p99_us=float(np.percentile(lat, 99)),
-            p999_us=float(np.percentile(lat, 99.9)))
+            p999_us=float(np.percentile(lat, 99.9)),
+            telemetry=tel)
 
 
 def homogeneous_cluster(spec: HostSpec, *, count: int = 1,

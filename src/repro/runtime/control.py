@@ -237,6 +237,15 @@ class ControlledHost:
         self.io_error_retries = 0
         self.degraded_chunks = 0
         self._degraded = False
+        self._deg_serving = False
+        tel = getattr(self.sim, "telemetry", None)
+        if tel is not None:
+            # failover-pressure windows are known up front (crashes on
+            # peer hosts); spans recorded after the warmup replay's reset
+            # land in the measurement telemetry
+            for ws, we in self.ctl.pressure_windows:
+                tel.tracer.span("control.failover_window", "control",
+                                ws, we - ws)
         self._crash_done: set = set()
         self._loss_done: set = set()
         self._err_rng: Dict[int, np.random.Generator] = {}
@@ -280,15 +289,24 @@ class ControlledHost:
         sched = self.sim.sched
         arr = np.asarray(ch.arrival_us, np.float64)
         t0, t1 = float(arr[0]), float(arr[-1])
+        tel = getattr(self.sim, "telemetry", None)
         for k, e in enumerate(self.ctl.events):
             if e.kind == "crash" and k not in self._crash_done \
                     and t0 >= e.start_us:
                 self._crash_done.add(k)
                 self._crash_restart(e.cold_restart)
+                if tel is not None:
+                    tel.recorder.record(e.start_us, "crash_restart",
+                                        cold=e.cold_restart)
+                    tel.tracer.span("control.crash_window", "control",
+                                    e.start_us, e.end_us - e.start_us,
+                                    cold=e.cold_restart)
             elif e.kind == "device_loss" and k not in self._loss_done \
                     and t0 >= e.start_us:
                 self._loss_done.add(k)
                 self._device_loss(e.start_us)
+                if tel is not None:
+                    tel.recorder.record(e.start_us, "device_loss")
         bg_eff = bg
         swap = None
         for e in self.ctl.events:
@@ -336,7 +354,15 @@ class ControlledHost:
             self._degraded = False
         pressure = deg.degrade_on_failover and any(
             ws <= t0 < we for ws, we in self.ctl.pressure_windows)
-        if not (self._degraded or pressure):
+        serving_degraded = self._degraded or pressure
+        tel = getattr(self.sim, "telemetry", None)
+        if tel is not None and serving_degraded != self._deg_serving:
+            tel.recorder.record(
+                t0, "degrade_enter" if serving_degraded else "degrade_exit",
+                mode=deg.mode,
+                cause="failover_pressure" if pressure else "queue_depth")
+        self._deg_serving = serving_degraded
+        if not serving_degraded:
             return False
         n = len(arr)
         self.degraded_chunks += 1
@@ -380,10 +406,17 @@ class ControlledHost:
             if not inw.size:
                 continue
             hits = inw[rng.random(inw.size) < e.error_rate]
+            retried = 0
             for q in hits:
                 if admitted[q]:
                     sched.p_lat[p0 + int(rank[q])] += e.retry_penalty_us
                     self.io_error_retries += 1
+                    retried += 1
+            if retried:
+                tel = getattr(self.sim, "telemetry", None)
+                if tel is not None:
+                    tel.recorder.record(float(eff[hits[0]]),
+                                        "io_error_retries", n=retried)
 
     def _crash_restart(self, cold: bool) -> None:
         """The host restarts: in-flight IOs and the admission ledger are
@@ -428,7 +461,17 @@ class ControlledHost:
         s.drop_plan_caches()
 
     def finalize_report(self, report):
-        """Stamp this replay's control-plane counters onto the report."""
+        """Stamp this replay's control-plane counters onto the report (and,
+        when telemetry is enabled, onto the registry — the HostReport
+        fields stay as views over the same numbers)."""
+        tel = getattr(self.sim, "telemetry", None)
+        if tel is not None:
+            reg = tel.registry
+            reg.set("control.crashes", self.crashes)
+            reg.set("control.stale_served", self.stale_served)
+            reg.set("control.shed_queries", self.shed_queries)
+            reg.set("control.io_error_retries", self.io_error_retries)
+            reg.set("control.degraded_chunks", self.degraded_chunks)
         return dataclasses.replace(
             report, crashes=self.crashes, stale_served=self.stale_served,
             shed_queries=self.shed_queries,

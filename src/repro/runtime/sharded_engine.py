@@ -166,6 +166,7 @@ class ShardedServingEngine:
             for k, v in one.items()}
         self.io = IOEngine(device, cfg.num_devices, cfg.io_queue)
         self.stats = QueryStats()
+        self.telemetry = None          # obs handle; None = bit-invisible
         self._step = jax.jit(self._make_step())
 
     # -- device step ----------------------------------------------------------
@@ -297,6 +298,12 @@ class ShardedServingEngine:
         lats, _ = self.io.submit_batch_multi(miss.reshape(-1), rb, bg_iops)
         sm_lat = lats.reshape(miss.shape).max(axis=(0, 2))     # [B]
         ios_q = miss.sum(axis=(0, 2))                          # [B]
+        if self.telemetry is not None:
+            reg = self.telemetry.registry
+            reg.inc("engine.batches")
+            reg.observe_many("engine.sm_time_us", sm_lat)
+            for k, v in enumerate(miss.sum(axis=(1, 2)).tolist()):
+                reg.inc(f"engine.shard{k}.sm_ios", int(v))
         stats = []
         for b in range(miss.shape[1]):
             q = QueryStats(latency_us=max(self.cfg.item_time_us, sm_lat[b]),

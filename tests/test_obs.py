@@ -1,0 +1,360 @@
+"""Unified telemetry plane: invisibility, parity, and export contracts.
+
+The observability PR's oracles:
+
+* a ``None`` telemetry handle is **bit-invisible** — every archetype, in
+  both latency modes, produces byte-identical ``ClusterSim.run`` reports
+  with telemetry off and on (the enabled plane consumes no RNG and never
+  perturbs the simulated clock);
+* merged registries inherit the repo's parity contracts — bit-equal across
+  serial/thread/process pools, and across streamed/materialized traces
+  once the ``diag.`` cache-topology namespace is dropped (streamed serving
+  drops replay caches per piece, so tier engagement legitimately differs);
+* the log2-bucket histogram's ``percentile_bounds`` provably contain the
+  exact ``np.percentile`` order statistics, and histogram merge equals
+  bulk observation;
+* the flight recorder captures a seeded crash -> failover sequence, and
+  the registry's control counters equal the ``HostReport`` fields they are
+  views of;
+* exports are well-formed: Prometheus text exposition, Chrome trace-event
+  JSON, the rendered run report.
+"""
+import dataclasses
+import importlib.util
+import json
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.power import HW_SS
+from repro.obs import (HOST_COUNTERS, FlightRecorder, LatencyHistogram,
+                       MetricsRegistry, ObsConfig, SpanRecorder, Telemetry,
+                       host_counter_metric, make_telemetry, prometheus_text,
+                       render_report, telemetry_json)
+from repro.runtime.cluster import ClusterConfig, ClusterSim, HostSpec
+from repro.runtime.control import DegradePolicy
+from repro.workloads import (ARCHETYPES, FailureEvent, FailureSpec,
+                             build_trace)
+from repro.workloads.stream import TraceStream
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _trace(name="zipf_steady", n=1500):
+    return build_trace(dataclasses.replace(ARCHETYPES[name], num_queries=n))
+
+
+def _hosts(k=2, cache=8 << 20, **kw):
+    return tuple(HostSpec(name=f"h{i}", host=HW_SS, device="nand_flash",
+                          fm_cache_bytes=cache, **kw) for i in range(k))
+
+
+def _sim(hosts, telemetry=None, chunk=64, routing="round_robin"):
+    return ClusterSim(ClusterConfig(hosts=hosts, routing=routing,
+                                    chunk=chunk, telemetry=telemetry))
+
+
+def _asdicts(rep):
+    return [dataclasses.asdict(h) for h in rep.hosts]
+
+
+# -- histogram ----------------------------------------------------------------
+
+def test_histogram_bounds_contain_exact_percentiles():
+    rng = np.random.default_rng(7)
+    vals = rng.lognormal(mean=6.0, sigma=2.0, size=5000)
+    h = LatencyHistogram()
+    h.observe_many(vals)
+    for p in (0.0, 50.0, 95.0, 99.0, 99.9, 100.0):
+        exact = float(np.percentile(vals, p))
+        lo, hi = h.percentile_bounds(p)
+        assert lo <= exact <= hi, (p, exact, lo, hi)
+        assert lo <= h.percentile(p) <= hi or h.percentile(p) == h.max
+
+
+def test_histogram_merge_equals_bulk_observation():
+    rng = np.random.default_rng(11)
+    a, b = rng.exponential(500.0, 800), rng.exponential(9000.0, 800)
+    parts = LatencyHistogram()
+    parts.observe_many(a)
+    other = LatencyHistogram()
+    other.observe_many(b)
+    parts.merge(other)
+    bulk = LatencyHistogram()
+    bulk.observe_many(a)
+    bulk.observe_many(b)
+    assert np.array_equal(parts.buckets, bulk.buckets)
+    assert parts.count == bulk.count == 1600
+    assert parts.min == bulk.min and parts.max == bulk.max
+
+
+def test_histogram_scalar_and_batch_observations_agree():
+    h1, h2 = LatencyHistogram(), LatencyHistogram()
+    vals = [0.0, 0.5, 1.0, 2.0, 3.5, 1e6, 2.0 ** 40]
+    for v in vals:
+        h1.observe(v)
+    h2.observe_many(np.asarray(vals))
+    assert np.array_equal(h1.buckets, h2.buckets)
+    assert h1.count == h2.count and h1.sum == h2.sum
+
+
+def test_histogram_observe_many_copies_input():
+    h = LatencyHistogram()
+    arr = np.full(8, 100.0)
+    h.observe_many(arr)
+    arr[:] = 1e12                       # caller mutates after observing
+    assert h.max == 100.0
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_registry_merge_counters_add_gauges_max():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.inc("x", 3)
+    a.gauge("g", 1.5)
+    a.observe("h", 10.0)
+    b.inc("x", 4)
+    b.inc("y")
+    b.gauge("g", 0.5)
+    b.observe("h", 1000.0)
+    a.merge(b)
+    assert a.counters == {"x": 7, "y": 1}
+    assert a.gauges == {"g": 1.5}
+    assert a.hist("h").count == 2 and a.hist("h").max == 1000.0
+
+
+def test_registry_as_dict_drop_prefixes():
+    r = MetricsRegistry()
+    r.inc("diag.tier.live")
+    r.inc("serve.queries", 5)
+    d = r.as_dict(drop_prefixes=("diag.",))
+    assert "diag.tier.live" not in d["counters"]
+    assert d["counters"]["serve.queries"] == 5
+
+
+def test_telemetry_pickle_roundtrip_with_pending_observations():
+    tel = Telemetry(host="h0")
+    tel.registry.observe_many("h", np.asarray([1.0, 2.0, 4000.0]))
+    tel.registry.observe("h", 8.0)
+    tel.tracer.span("s", "c", 1.0, 2.0, k=1)
+    tel.recorder.record(5.0, "crash_restart", cold=True)
+    clone = pickle.loads(pickle.dumps(tel))
+    assert clone.registry.hist("h").count == 4
+    assert clone.registry.as_dict() == tel.registry.as_dict()
+    assert clone.tracer.events == tel.tracer.events
+    assert clone.recorder.anomalous
+
+
+def test_make_telemetry_flag_forms():
+    assert make_telemetry(None) is None
+    assert make_telemetry(False) is None
+    assert isinstance(make_telemetry(True), Telemetry)
+    cfg = ObsConfig(span_sample_every=4)
+    tel = make_telemetry(cfg, host="h3")
+    assert tel.tracer.sample_every == 4 and tel.host == "h3"
+    proto = make_telemetry(Telemetry(cfg), host="h4")
+    assert proto.tracer.sample_every == 4
+    with pytest.raises(TypeError):
+        make_telemetry(object())
+
+
+# -- tracer / recorder --------------------------------------------------------
+
+def test_span_sampling_is_deterministic_and_bounded():
+    tr = SpanRecorder(sample_every=4, max_events=3)
+    for i in range(20):
+        tr.span("s", "c", float(i), 1.0)
+    # occurrences 0, 4, 8 recorded; 12, 16 dropped by the cap
+    assert [e[0] for e in tr.events] == [0.0, 4.0, 8.0]
+    assert tr.dropped == 2
+    assert tr.want("s") is True         # occurrence 20: a sample point
+    assert tr.want("s") is False        # occurrence 21: not one
+
+
+def test_chrome_trace_is_valid_trace_event_json():
+    tr = SpanRecorder(host="h0")
+    tr.span("serve.chunk", "serve", 10.0, 5.0, n=64)
+    tr.instant("crash", "control", 11.0)
+    tr.counter("depth", 12.0, 3)
+    doc = json.loads(json.dumps(tr.chrome_trace()))
+    evs = doc["traceEvents"]
+    assert all({"name", "ph", "pid", "tid"} <= set(e) for e in evs)
+    x = [e for e in evs if e["ph"] == "X"]
+    assert len(x) == 1 and x[0]["dur"] == 5.0 and x[0]["args"]["n"] == 64
+    assert {e["ph"] for e in evs} == {"M", "X", "i", "C"}
+
+
+def test_flight_recorder_ring_is_bounded_and_ordered():
+    fr = FlightRecorder(capacity=4, host="h1")
+    for i in range(10):
+        fr.record(float(10 - i), "degrade_enter", k=i)
+    dump = fr.dump()
+    assert len(dump) == 4                      # ring kept the last 4 records
+    assert [d["at_us"] for d in dump] == sorted(d["at_us"] for d in dump)
+    assert not fr.anomalous                    # no anomaly kind recorded
+    fr.record(99.0, "crash_restart")
+    assert fr.anomalous
+
+
+# -- bit-invisibility ---------------------------------------------------------
+
+@pytest.mark.parametrize("latency_mode", ["analytic", "sampled"])
+@pytest.mark.parametrize("arch", sorted(ARCHETYPES))
+def test_disabled_handle_is_bit_invisible(arch, latency_mode):
+    trace = _trace(arch, n=1200)
+    hosts = _hosts(k=2, latency_mode=latency_mode)
+    off = _sim(hosts, telemetry=None).run(trace)
+    on = _sim(hosts, telemetry=True).run(trace)
+    assert _asdicts(off) == _asdicts(on)
+    assert (off.p50_us, off.p95_us, off.p99_us, off.p999_us) == \
+        (on.p50_us, on.p95_us, on.p99_us, on.p999_us)
+    assert off.telemetry is None and on.telemetry is not None
+
+
+def test_spec_level_false_overrides_cluster_default():
+    trace = _trace(n=900)
+    hosts = (_hosts(k=1)[0],
+             dataclasses.replace(_hosts(k=2)[1], telemetry=False))
+    rep = _sim(hosts, telemetry=True).run(trace)
+    # h1 explicitly off: only h0 contributes a registry
+    assert rep.telemetry is not None
+    assert rep.telemetry.registry.counters["serve.queries"] == \
+        rep.hosts[0].queries
+
+
+# -- parity of merged registries ----------------------------------------------
+
+def test_registry_parity_serial_thread_process():
+    trace = _trace("multi_tenant", n=1500)
+    hosts = _hosts(k=3)
+    serial = _sim(hosts, telemetry=True).run(trace, passes=2, warmup=True)
+    want = serial.telemetry.registry.as_dict()
+    for mode in ("thread", "process"):
+        got = _sim(hosts, telemetry=True).run(trace, passes=2, warmup=True,
+                                              parallel=mode)
+        assert got.telemetry.registry.as_dict() == want, mode
+
+
+def test_registry_parity_streamed_vs_materialized():
+    stream = TraceStream(dataclasses.replace(ARCHETYPES["zipf_steady"],
+                                             num_queries=1500),
+                         piece=600, block=128)
+    hosts = _hosts(k=2)
+    mat = _sim(hosts, telemetry=True).run(stream.materialize(),
+                                          passes=2, warmup=True)
+    st = _sim(hosts, telemetry=True).run_stream(stream, passes=2,
+                                                warmup=True)
+    drop = ("diag.",)
+    assert mat.telemetry.registry.as_dict(drop_prefixes=drop) == \
+        st.telemetry.registry.as_dict(drop_prefixes=drop)
+
+
+# -- counter views / crash capture --------------------------------------------
+
+def _crash_run(telemetry=True, n=2000):
+    trace = _trace("multi_tenant", n=n)
+    d = trace.duration_us
+    failures = FailureSpec(events=(FailureEvent(
+        host="h1", kind="crash", start_us=0.4 * d, end_us=0.7 * d,
+        inflight_window_us=0.02 * d),))
+    sim = _sim(_hosts(k=3), telemetry=telemetry)
+    return sim.run(trace, failures=failures,
+                   degrade=DegradePolicy(mode="stale"))
+
+
+def test_registry_counters_are_views_of_host_report_fields():
+    rep = _crash_run()
+    reg = rep.telemetry.registry
+    for field, rollup, metric, _plane in HOST_COUNTERS:
+        want = sum(getattr(h, field) for h in rep.hosts)
+        assert getattr(rep, rollup) == want          # generated rollup
+        assert reg.counters.get(metric, 0) == want, metric
+    assert rep.crashes == 1 and rep.failed_over > 0
+
+
+def test_flight_recorder_captures_crash_failover():
+    rep = _crash_run()
+    ring = rep.telemetry.recorder
+    assert ring.anomalous
+    kinds = [d["kind"] for d in ring.dump()]
+    assert "crash_restart" in kinds
+    crash = next(d for d in ring.dump() if d["kind"] == "crash_restart")
+    assert crash["host"] == "h1" and crash["details"]["cold"] is True
+    # failover pressure degraded the surviving hosts
+    assert "degrade_enter" in kinds
+    # the crash window made it into the span trace too
+    names = {e[3] for e in rep.telemetry.tracer.events}
+    assert "control.crash_window" in names
+    assert "control.failover_window" in names
+
+
+def test_host_counter_metric_lookup():
+    assert host_counter_metric("crashes") == "control.crashes"
+    with pytest.raises(KeyError):
+        host_counter_metric("nope")
+
+
+# -- tier engagement / measurement scoping ------------------------------------
+
+def test_tier_engagement_on_warm_replay():
+    trace = _trace("zipf_steady", n=1200)
+    hosts = _hosts(k=1, cache=192 << 20)
+    rep = _sim(hosts, telemetry=True, chunk=128).run(trace, passes=2,
+                                                     warmup=True)
+    c = rep.telemetry.registry.counters
+    tiers = {k: v for k, v in c.items() if k.startswith("diag.tier.")}
+    assert tiers and sum(tiers.values()) > 0
+    # warm replay of a cache-resident working set engages the fast tiers,
+    # never the exact-sequential fallback
+    assert c.get("diag.tier.fallback", 0) == 0
+    assert c.get("serve.batch_fallbacks", 1) == 0
+
+
+def test_reset_measurement_scopes_serve_counters():
+    # with warmup, serve.queries counts only the measurement replays
+    trace = _trace(n=900)
+    hosts = _hosts(k=1)
+    rep = _sim(hosts, telemetry=True).run(trace, passes=1, warmup=True)
+    reg = rep.telemetry.registry
+    assert reg.counters["serve.queries"] == len(trace)
+    assert reg.hist("serve.latency_us").count == len(trace)
+
+
+# -- exports ------------------------------------------------------------------
+
+def test_prometheus_text_exposition():
+    r = MetricsRegistry()
+    r.inc("serve.queries", 9)
+    r.gauge("cache.row_hit_rate", 0.75)
+    r.observe("serve.latency_us", 100.0)
+    text = prometheus_text(r)
+    assert "# TYPE sdm_serve_queries counter" in text
+    assert "sdm_serve_queries 9" in text
+    assert "# TYPE sdm_cache_row_hit_rate gauge" in text
+    assert "# TYPE sdm_serve_latency_us histogram" in text
+    assert 'le="+Inf"' in text
+    assert "sdm_serve_latency_us_count 1" in text
+
+
+def test_telemetry_json_and_report_render():
+    rep = _crash_run()
+    doc = json.loads(json.dumps(telemetry_json(
+        rep.telemetry, git_sha="abc1234", generated_unix=123)))
+    assert doc["git_sha"] == "abc1234" and doc["generated_unix"] == 123
+    assert doc["metrics"]["counters"]["control.crashes"] == 1
+    text = render_report(rep.telemetry, hosts=rep.hosts, title="t")
+    assert "tier engagement" in text
+    assert "flight recorder" in text            # anomaly ring rendered
+    assert "h1" in text
+
+
+# -- lint self-test -----------------------------------------------------------
+
+def test_obs_lint_catalog_matches_dataclasses():
+    spec = importlib.util.spec_from_file_location(
+        "obs_lint", os.path.join(ROOT, "tools", "obs_lint.py"))
+    obs_lint = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(obs_lint)
+    assert obs_lint.check() == []

@@ -10,6 +10,7 @@ tight enough that an accidental fast-path break (which costs 5-60x, not
 from __future__ import annotations
 
 import argparse
+import datetime
 import json
 import os
 import sys
@@ -43,13 +44,28 @@ def select_perf_entry(entries):
     return None
 
 
-def committed_us_per_query(path: str) -> float:
+def baseline_entry(path: str) -> dict:
+    """The full trajectory entry the guard compares against."""
     with open(path) as f:
         data = json.load(f)
     entry = select_perf_entry(data.get("entries", []))
     if entry is None:
         raise SystemExit(
             f"no usable perf_trace.us_per_query entry in {path}")
+    return entry
+
+
+def describe_entry(entry: dict) -> str:
+    """One-line provenance of a baseline entry: sha, UTC date, us/query."""
+    when = datetime.datetime.fromtimestamp(
+        int(entry.get("generated_unix") or 0),
+        tz=datetime.timezone.utc).strftime("%Y-%m-%d")
+    us = entry["results"]["perf_trace"]["us_per_query"]
+    return f"sha={entry.get('git_sha')} date={when} us_per_query={us}"
+
+
+def committed_us_per_query(path: str) -> float:
+    entry = baseline_entry(path)
     return float(entry["results"]["perf_trace"]["us_per_query"])
 
 
@@ -62,7 +78,10 @@ def main() -> None:
                     help="override the benchmark's trace length")
     args = ap.parse_args()
 
-    committed = committed_us_per_query(args.file)
+    entry = baseline_entry(args.file)
+    committed = float(entry["results"]["perf_trace"]["us_per_query"])
+    print(f"bench-guard: baseline {describe_entry(entry)} "
+          f"from {os.path.basename(args.file)}")
     sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
     from benchmarks import perf_trace
     kw = {} if args.queries is None else {"num_queries": args.queries}

@@ -1,0 +1,84 @@
+"""CI perf guard: enabled telemetry must stay cheap on the warm serve path.
+
+Runs the ``perf_trace`` acceptance workload (warm columnar replay of a
+zipf_steady trace on one HW-SS/Nand host) twice per rep — telemetry off,
+then telemetry on — and compares min-of-reps wall clock. Fails when the
+enabled-telemetry run costs more than ``--factor`` (default 1.10, the
+ISSUE's <10% overhead contract) times the vanilla run. The disabled case
+needs no guard: a ``None`` handle is bit-invisible by construction and the
+parity tests enforce it.
+
+Run via ``make obs-guard``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def measure(num_queries: int = 20_000, reps: int = 3) -> dict:
+    """Min-of-reps warm wall clock with telemetry off vs on."""
+    sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
+    from benchmarks.perf_trace import CHUNK, FM_CACHE
+    from repro.core.power import HW_SS
+    from repro.runtime.cluster import HostSpec, homogeneous_cluster
+    from repro.workloads import ARCHETYPES, build_trace
+
+    trace = build_trace(dataclasses.replace(
+        ARCHETYPES["zipf_steady"], num_queries=num_queries))
+
+    def _cluster(telemetry):
+        return homogeneous_cluster(
+            HostSpec("HW-SS", HW_SS, device="nand_flash",
+                     fm_cache_bytes=FM_CACHE, telemetry=telemetry),
+            chunk=CHUNK)
+
+    # one unmeasured warm run to build the trace's grouping/factor caches,
+    # so both arms time the steady-state regime
+    _cluster(None).run(trace, passes=2, warmup=True)
+
+    off_t, on_t = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r_off = _cluster(None).run(trace, passes=2, warmup=True)
+        t1 = time.perf_counter()
+        r_on = _cluster(True).run(trace, passes=2, warmup=True)
+        t2 = time.perf_counter()
+        off_t.append(t1 - t0)
+        on_t.append(t2 - t1)
+
+    # the guard is only meaningful if telemetry stayed invisible
+    for h_off, h_on in zip(r_off.hosts, r_on.hosts):
+        assert dataclasses.asdict(h_off) == dataclasses.asdict(h_on), \
+            "telemetry-enabled run diverged from vanilla reports"
+    assert r_on.telemetry is not None
+
+    return {"queries": num_queries, "reps": reps,
+            "off_s": min(off_t), "on_s": min(on_t),
+            "overhead": min(on_t) / min(off_t)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--factor", type=float, default=1.10,
+                    help="fail when on_s > factor * off_s")
+    ap.add_argument("--queries", type=int, default=20_000)
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+
+    m = measure(num_queries=args.queries, reps=args.reps)
+    verdict = "OK" if m["overhead"] <= args.factor else "TOO SLOW"
+    print(f"obs-guard: telemetry off {m['off_s']:.3f}s, "
+          f"on {m['on_s']:.3f}s -> overhead {m['overhead']:.3f}x "
+          f"(budget {args.factor:.2f}x) -> {verdict}")
+    if m["overhead"] > args.factor:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""CI lint: counter-bearing dataclasses must stay in the telemetry registry.
+
+PRs 7 and 9 each grew ``HostReport``/``QueryStats``/``IntegrityStats`` by a
+handful of ad-hoc counter fields, and each time the cluster roll-up code had
+to be extended by hand. PR 10 moved the catalog into
+``repro.obs.metrics.HOST_COUNTERS`` + ``LINT_FIELD_ALLOWLIST``; this lint
+fails CI when someone adds a field to one of those dataclasses without
+registering it there (or removes one without cleaning up the catalog), so
+the registry, the ClusterReport roll-ups, and the run reports can never
+drift from the dataclasses again.
+
+Run via ``make obs-lint`` (or directly: ``python tools/obs_lint.py``).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# class name -> source file holding its dataclass definition
+CLASS_FILES = {
+    "HostReport": os.path.join("src", "repro", "runtime", "cluster.py"),
+    "QueryStats": os.path.join("src", "repro", "core", "sdm.py"),
+    "IntegrityStats": os.path.join("src", "repro", "devices", "integrity.py"),
+}
+
+
+def declared_fields(path: str, cls: str) -> set:
+    """Field names of a dataclass, straight from its AST (annotated
+    assignments in the class body — exactly what @dataclass turns into
+    fields)."""
+    with open(path) as f:
+        tree = ast.parse(f.read(), filename=path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls:
+            return {stmt.target.id for stmt in node.body
+                    if isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)}
+    raise SystemExit(f"obs-lint: class {cls} not found in {path}")
+
+
+def check(root: str = ROOT) -> list:
+    """All allowlist violations, as human-readable strings."""
+    sys.path.insert(0, os.path.join(root, "src"))
+    from repro.obs.metrics import LINT_FIELD_ALLOWLIST
+
+    problems = []
+    for cls, rel in CLASS_FILES.items():
+        have = declared_fields(os.path.join(root, rel), cls)
+        want = LINT_FIELD_ALLOWLIST[cls]
+        for f in sorted(have - want):
+            problems.append(
+                f"{cls}.{f} ({rel}) is not in the telemetry catalog — "
+                f"add it to repro.obs.metrics (HOST_COUNTERS / "
+                f"LINT_FIELD_ALLOWLIST) instead of growing ad-hoc fields")
+        for f in sorted(want - have):
+            problems.append(
+                f"{cls}.{f} is in LINT_FIELD_ALLOWLIST but no longer a "
+                f"field of {cls} ({rel}) — clean up the catalog")
+    return problems
+
+
+def main() -> None:
+    problems = check()
+    for p in problems:
+        print(f"obs-lint: {p}")
+    if problems:
+        raise SystemExit(1)
+    n = len(CLASS_FILES)
+    print(f"obs-lint: OK ({n} dataclasses match the telemetry catalog)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Per-run observability report: tiers, hit rates, queues, tails, flight ring.
+
+Turns a telemetry-enabled ``ClusterSim`` run into the three artifacts the
+observability plane exports:
+
+* a human-readable run report (tier engagement, cache hit rates,
+  queue-depth timeline, tail breakdown by cause, flight-recorder dump on
+  anomaly) — stdout or ``--out``;
+* a Chrome trace-event JSON (``--trace-out``) loadable in Perfetto /
+  ``chrome://tracing``;
+* a machine-readable metrics JSON (``--json-out``) keyed by git sha +
+  timestamp like ``BENCH_serve.json`` entries.
+
+``--run fleet`` (the default) replays the ``fleet_ops`` failover demo — a
+mid-trace crash on a 3-host multi-tenant fleet — so the report exercises
+every section including the anomaly ring. ``--run steady`` serves the
+``perf_trace`` zipf_steady workload on one host for a clean-path report.
+
+Run:  PYTHONPATH=src:. python tools/obs_report.py [--run fleet|steady]
+          [--queries N] [--out F] [--trace-out F] [--json-out F]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [os.path.join(ROOT, "src"), ROOT]
+
+from repro.core.power import HW_SS                              # noqa: E402
+from repro.obs import render_report, telemetry_json, write_chrome_trace  # noqa: E402
+from repro.runtime.cluster import (ClusterConfig, ClusterSim,   # noqa: E402
+                                   HostSpec)
+from repro.runtime.control import DegradePolicy                 # noqa: E402
+from repro.workloads import (ARCHETYPES, FailureEvent,          # noqa: E402
+                             FailureSpec, build_trace)
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT,
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except Exception:
+        return "unknown"
+
+
+def run_fleet(num_queries: int = 6000):
+    """The fleet_ops failover demo with telemetry on: a mid-trace crash on
+    h1 of a 3-host multi-tenant fleet, stale-degraded, zero queries lost."""
+    trace = build_trace(dataclasses.replace(
+        ARCHETYPES["multi_tenant"], num_queries=num_queries))
+    d = trace.duration_us
+    failures = FailureSpec(events=(FailureEvent(
+        host="h1", kind="crash", start_us=0.4 * d, end_us=0.7 * d,
+        inflight_window_us=0.02 * d),))
+    hosts = tuple(HostSpec(name=f"h{i}", host=HW_SS, device="nand_flash",
+                           fm_cache_bytes=8 << 20) for i in range(3))
+    sim = ClusterSim(ClusterConfig(hosts=hosts, routing="round_robin",
+                                   chunk=64, telemetry=True))
+    rep = sim.run(trace, failures=failures,
+                  degrade=DegradePolicy(mode="stale"))
+    return rep, "fleet failover (crash on h1, stale degrade)"
+
+
+def run_steady(num_queries: int = 6000):
+    """The perf_trace steady workload on one warm host, telemetry on."""
+    trace = build_trace(dataclasses.replace(
+        ARCHETYPES["zipf_steady"], num_queries=num_queries))
+    hosts = (HostSpec(name="HW-SS", host=HW_SS, device="nand_flash",
+                      fm_cache_bytes=192 << 20),)
+    sim = ClusterSim(ClusterConfig(hosts=hosts, chunk=256, telemetry=True))
+    rep = sim.run(trace, passes=2, warmup=True)
+    return rep, "zipf_steady warm serve (1 host)"
+
+
+RUNS = {"fleet": run_fleet, "steady": run_steady}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--run", choices=sorted(RUNS), default="fleet")
+    ap.add_argument("--queries", type=int, default=6000)
+    ap.add_argument("--out", default=None,
+                    help="write the text report here instead of stdout")
+    ap.add_argument("--trace-out", default=None,
+                    help="write Chrome trace-event JSON here")
+    ap.add_argument("--json-out", default=None,
+                    help="write metrics JSON (BENCH-style keying) here")
+    args = ap.parse_args()
+
+    rep, title = RUNS[args.run](num_queries=args.queries)
+    tel = rep.telemetry
+    assert tel is not None, "run produced no telemetry"
+
+    text = render_report(tel, hosts=rep.hosts, title=title)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"obs-report: wrote {args.out}")
+    else:
+        print(text)
+
+    if args.trace_out:
+        write_chrome_trace(tel, args.trace_out)
+        print(f"obs-report: wrote {args.trace_out} "
+              f"({len(tel.tracer.events)} spans)")
+
+    if args.json_out:
+        doc = telemetry_json(tel, git_sha=_git_sha(),
+                             generated_unix=int(time.time()))
+        doc["run"] = args.run
+        doc["queries"] = args.queries
+        with open(args.json_out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"obs-report: wrote {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()
